@@ -1,0 +1,337 @@
+"""Benchmark harness — one function per paper table (DESIGN.md §7).
+
+Scaled to this container (single CPU, synthetic graphs); the *shapes* of
+the paper's results are what's reproduced: superstep-sharing throughput
+vs capacity C, Hub^2 access-rate reduction, BFS-vs-BiBFS asymmetry,
+label-pruned reachability, terrain early termination, keyword-count
+scaling.  Output: ``table,metric,value`` CSV on stdout, plus a JSON dump
+under runs/bench/.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only table7a] [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+RESULTS: dict[str, dict] = {}
+
+
+def emit(table: str, metric: str, value):
+    RESULTS.setdefault(table, {})[metric] = value
+    if isinstance(value, float):
+        print(f"{table},{metric},{value:.4f}")
+    else:
+        print(f"{table},{metric},{value}")
+
+
+def _pairs(n, k, seed=0):
+    rng = np.random.default_rng(seed)
+    return [(int(a), int(b)) for a, b in rng.integers(0, n, (k, 2))]
+
+
+def _drain(eng, pairs):
+    for p in pairs:
+        eng.submit(jnp.asarray(p, jnp.int32))
+    t0 = time.perf_counter()
+    res = eng.run_until_drained()
+    return time.perf_counter() - t0, res
+
+
+# ---------------------------------------------------------------- Table 2
+def table2_interactive(quick=False):
+    """Per-query latency + access rate, Quegel Hub^2 (paper Table 2)."""
+    from repro.apps.hub2 import build_hub_index, make_hub2_engine
+    from repro.core.graph import barabasi_albert
+
+    g = barabasi_albert(3000 if not quick else 600, 3, seed=0)
+    t0 = time.perf_counter()
+    idx = build_hub_index(g, k=16, capacity=8)
+    emit("table2", "index_s", time.perf_counter() - t0)
+    eng = make_hub2_engine(g, idx, capacity=1)  # interactive: one at a time
+    pairs = _pairs(g.n_real, 20, seed=1)
+    times, access = [], []
+    for s, t in pairs:
+        t0 = time.perf_counter()
+        r = eng.query(jnp.asarray([s, t], jnp.int32))
+        times.append(time.perf_counter() - t0)
+        access.append(int(r["visited"]) / g.n_real)
+    emit("table2", "n_queries", len(pairs))
+    emit("table2", "mean_query_s", float(np.mean(times)))
+    emit("table2", "p95_query_s", float(np.percentile(times, 95)))
+    emit("table2", "mean_access_rate", float(np.mean(access)))
+
+
+# ------------------------------------------------------------- Tables 3/4
+def table3_bfs_vs_bibfs(quick=False):
+    """Cumulative BFS vs BiBFS on a power-law graph (Twitter-like, most
+    pairs reachable) and a multi-CC graph (BTC-like, most unreachable)."""
+    from repro.apps.ppsp import make_bfs_engine, make_bibfs_engine
+    from repro.core.graph import barabasi_albert, multi_component_graph
+
+    n_q = 10 if quick else 20
+    for tag, g in (
+        ("twitterlike", barabasi_albert(2000 if not quick else 400, 3, seed=2)),
+        ("btclike", multi_component_graph(8, 250 if not quick else 50, 2.0, seed=3)),
+    ):
+        pairs = _pairs(g.n_real, n_q, seed=4)
+        for name, mk in (("bfs", make_bfs_engine), ("bibfs", make_bibfs_engine)):
+            eng = mk(g, capacity=8)
+            dt, res = _drain(eng, pairs)
+            acc = np.mean([int(r["visited"]) for r in res.values()]) / g.n_real
+            emit("table3", f"{tag}_{name}_query_s", dt)
+            emit("table3", f"{tag}_{name}_access_rate", float(acc))
+
+
+# ------------------------------------------------------------- Tables 5/6
+def table5_hub2(quick=False):
+    """Hub^2 index: build time and query speed/access vs k."""
+    from repro.apps.hub2 import build_hub_index, make_hub2_engine
+    from repro.apps.ppsp import make_bibfs_engine
+    from repro.core.graph import barabasi_albert
+
+    g = barabasi_albert(2000 if not quick else 400, 3, seed=5)
+    pairs = _pairs(g.n_real, 10 if quick else 30, seed=6)
+    eng0 = make_bibfs_engine(g, capacity=8)
+    dt0, res0 = _drain(eng0, pairs)
+    emit("table5", "bibfs_query_s", dt0)
+    emit("table5", "bibfs_access_rate",
+         float(np.mean([int(r["visited"]) for r in res0.values()]) / g.n_real))
+    for k in (8, 32):
+        t0 = time.perf_counter()
+        idx = build_hub_index(g, k=k, capacity=8)
+        emit("table5", f"k{k}_index_s", time.perf_counter() - t0)
+        eng = make_hub2_engine(g, idx, capacity=8)
+        dt, res = _drain(eng, pairs)
+        emit("table5", f"k{k}_query_s", dt)
+        emit("table5", f"k{k}_access_rate",
+             float(np.mean([int(r["visited"]) for r in res.values()]) / g.n_real))
+
+
+# -------------------------------------------------------------- Table 7a
+def table7a_capacity(quick=False):
+    """Throughput vs capacity C — the superstep-sharing headline.
+
+    Light-weight (Hub²-indexed) queries, the paper's target workload.  Two
+    numbers per C: measured single-device wall time, and a modeled cluster
+    time  measured/W + barriers × t_sync  (W=120 workers, t_sync=10 ms —
+    the paper's GbE/MPI setting, where compute is spread over the cluster
+    and each super-round pays one synchronization).  On ONE device the
+    dense (C, V) slabs make compute grow with C, so the *measured* curve
+    is flat; the barrier count drops ~C-fold — that is the quantity
+    superstep-sharing optimizes, and the modeled curve shows the paper's
+    Table 7a shape (steep rise, saturation by C≈8)."""
+    from repro.apps.hub2 import build_hub_index, make_hub2_engine
+    from repro.core.graph import barabasi_albert
+
+    T_BARRIER = 0.010
+    W = 120
+    g = barabasi_albert(1500 if not quick else 300, 3, seed=7)
+    idx = build_hub_index(g, k=16, capacity=8)
+    pairs = _pairs(g.n_real, 16 if quick else 48, seed=8)
+    for c in (1, 2, 4, 8, 16):
+        eng = make_hub2_engine(g, idx, capacity=c)
+        dt, res = _drain(eng, pairs)
+        assert len(res) == len(pairs)
+        emit("table7a", f"C{c}_total_s", dt)
+        emit("table7a", f"C{c}_barriers", eng.stats.barriers)
+        emit("table7a", f"C{c}_qps", len(pairs) / dt)
+        modeled = dt / W + eng.stats.barriers * T_BARRIER
+        emit("table7a", f"C{c}_modeled_cluster_s", modeled)
+        emit("table7a", f"C{c}_modeled_qps", len(pairs) / modeled)
+
+
+# -------------------------------------------------------------- Table 7b
+def table7b_scaling(quick=False):
+    """Worker scaling — balance of the edge partition and the collective
+    bytes per super-round as worker count grows (simulated: we report the
+    partition statistics the runtime would see; real speedup needs a pod)."""
+    from repro.core.distributed import ShardedGraph
+    from repro.core.graph import barabasi_albert
+
+    g = barabasi_albert(1024 if not quick else 256, 3, seed=9)
+    for w in (2, 4, 8, 16):
+        if g.n % w:
+            continue
+        sg = ShardedGraph(g, w, partition="dst")
+        per = np.asarray(sg.valid).sum(axis=1)
+        emit("table7b", f"w{w}_max_edges", int(per.max()))
+        emit("table7b", f"w{w}_balance", float(per.max() / max(per.mean(), 1)))
+        # dst partition all-gathers the (C, V/w) result per round
+        emit("table7b", f"w{w}_collective_bytes_per_round", int(8 * g.n * 4))
+
+
+# --------------------------------------------------------------- Table 8
+def table8_xml(quick=False):
+    """XML keyword search: SLCA (naive vs level-aligned), ELCA, MaxMatch."""
+    from repro.apps.keyword import MAXK, make_vertex_text
+    from repro.apps.xmlkw import (
+        MaxMatch, SLCALevelAligned, SLCANaive, build_xml_index, make_xml_engine)
+    from repro.core.graph import random_tree
+
+    n = 2000 if not quick else 400
+    g, parent = random_tree(n, max_fanout=6, seed=10)
+    tokens = make_vertex_text(n, 40, 3, seed=11)
+    idx = build_xml_index(parent, tokens, g.n)
+    rng = np.random.default_rng(12)
+    queries = [rng.integers(0, 20, 2).tolist() for _ in range(8 if quick else 16)]
+
+    def run(cls, tag):
+        eng = make_xml_engine(cls, g, idx, capacity=8)
+        for kws in queries:
+            q = np.full(MAXK, -1, np.int32)
+            q[: len(kws)] = kws
+            eng.submit(jnp.asarray(q))
+        t0 = time.perf_counter()
+        eng.run_until_drained()
+        emit("table8", f"{tag}_total_s", time.perf_counter() - t0)
+
+    run(SLCANaive, "slca_naive")
+    run(SLCALevelAligned, "slca_level_aligned")
+    run(MaxMatch, "maxmatch")
+
+
+# -------------------------------------------------------------- Table 10
+def table10_terrain(quick=False):
+    """Terrain SSSP: time/steps/access vs query distance; early stop."""
+    from repro.apps.terrain import make_terrain_engine
+    from repro.core.graph import grid_terrain
+
+    g, coords = grid_terrain(24 if quick else 40, 28 if quick else 45,
+                             eps_subdiv=2, seed=13)
+    eng = make_terrain_engine(g, coords, capacity=1)
+    s = 0
+    for i, hop in enumerate((4, 16, 64, 256)):
+        t = min(g.n_real - 1, hop * 40)
+        t0 = time.perf_counter()
+        r = eng.query(jnp.asarray([s, t], jnp.int32))
+        emit("table10", f"q{i+1}_s", time.perf_counter() - t0)
+        emit("table10", f"q{i+1}_len_m", float(r["dist"]))
+        emit("table10", f"q{i+1}_access_rate", int(r["visited"]) / g.n_real)
+
+
+# -------------------------------------------------------------- Table 11
+def table11_reach(quick=False):
+    """Reachability: index build phases + pruned query access rate."""
+    from repro.apps.ppsp import make_bibfs_engine
+    from repro.apps.reach import build_reach_index, make_reach_engine, scc_condense
+    from repro.core.graph import random_graph
+
+    g = random_graph(3000 if not quick else 600, 2.5, seed=14)
+    t0 = time.perf_counter()
+    comp, dag = scc_condense(g)
+    emit("table11", "scc_s", time.perf_counter() - t0)
+    emit("table11", "dag_vertices", dag.n_real)
+    t0 = time.perf_counter()
+    idx = build_reach_index(dag)
+    emit("table11", "label_s", time.perf_counter() - t0)
+    pairs = _pairs(dag.n_real, 10 if quick else 30, seed=15)
+    eng = make_reach_engine(dag, idx, capacity=8)
+    dt, res = _drain(eng, pairs)
+    emit("table11", "query_s", dt)
+    emit("table11", "access_rate",
+         float(np.mean([int(r["visited"]) for r in res.values()]) / dag.n_real))
+    plain = make_bibfs_engine(dag, capacity=8)
+    dtp, resp = _drain(plain, pairs)
+    emit("table11", "plain_bibfs_access_rate",
+         float(np.mean([int(r["visited"]) for r in resp.values()]) / dag.n_real))
+
+
+# -------------------------------------------------------------- Table 12
+def table12_keyword(quick=False):
+    """RDF keyword search: 2 vs 3 keywords."""
+    from repro.apps.keyword import MAXK, make_keyword_engine, make_vertex_text
+    from repro.core.graph import random_graph
+
+    g = random_graph(2000 if not quick else 400, 3.0, seed=16, directed=True)
+    tokens = make_vertex_text(g.n_real, 30, 2, seed=17)
+    tokens = np.pad(tokens, ((0, g.n - g.n_real), (0, 0)), constant_values=-2)
+    eng = make_keyword_engine(g, tokens, capacity=8, delta_max=3)
+    rng = np.random.default_rng(18)
+    for m in (2, 3):
+        qs = []
+        for _ in range(8 if quick else 16):
+            q = np.full(MAXK, -1, np.int32)
+            q[:m] = rng.integers(0, 12, m)
+            qs.append(jnp.asarray(q))
+        for q in qs:
+            eng.submit(q)
+        t0 = time.perf_counter()
+        res = eng.run_until_drained()
+        emit("table12", f"kw{m}_total_s", time.perf_counter() - t0)
+        emit("table12", f"kw{m}_mean_touched",
+             float(np.mean([int(r["touched"]) for r in res.values()]) / g.n_real))
+        eng._results.clear()
+
+
+# ----------------------------------------------------------- kernel bench
+def bench_kernels(quick=False):
+    """Frontier-propagation backends (CPU wall-time; Pallas numbers are
+    interpret-mode and NOT TPU-representative — the roofline table covers
+    the TPU story)."""
+    import jax
+
+    from repro.core.graph import barabasi_albert
+    from repro.core.semiring import INF, MIN_RIGHT
+    from repro.kernels import frontier, ref
+
+    g = barabasi_albert(1024 if not quick else 256, 4, seed=19)
+    rng = np.random.default_rng(20)
+    x = rng.integers(0, 30, (8, g.n)).astype(np.int32)
+    x[rng.random(x.shape) < 0.5] = INF
+    x = jnp.asarray(x)
+    bs = g.to_blocks(128, MIN_RIGHT.add_id)
+
+    f_coo = jax.jit(lambda x: ref.propagate_coo(g, MIN_RIGHT, x))
+    f_blk = jax.jit(lambda x: ref.propagate_blocks_ref(bs, MIN_RIGHT, x))
+    for name, fn in (("coo", f_coo), ("blocks_ref", f_blk)):
+        fn(x).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(10):
+            fn(x).block_until_ready()
+        emit("kernels", f"{name}_us", (time.perf_counter() - t0) / 10 * 1e6)
+    t0 = time.perf_counter()
+    frontier.propagate_blocks(bs, MIN_RIGHT, x, interpret=True).block_until_ready()
+    emit("kernels", "pallas_interpret_us", (time.perf_counter() - t0) * 1e6)
+    emit("kernels", "edges", g.num_edges)
+
+
+TABLES = {
+    "table2": table2_interactive,
+    "table3": table3_bfs_vs_bibfs,
+    "table5": table5_hub2,
+    "table7a": table7a_capacity,
+    "table7b": table7b_scaling,
+    "table8": table8_xml,
+    "table10": table10_terrain,
+    "table11": table11_reach,
+    "table12": table12_keyword,
+    "kernels": bench_kernels,
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="runs/bench")
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(TABLES)
+    for name in names:
+        print(f"# --- {name} ---")
+        t0 = time.perf_counter()
+        TABLES[name](quick=args.quick)
+        emit(name, "bench_wall_s", time.perf_counter() - t0)
+    os.makedirs(args.out, exist_ok=True)
+    with open(os.path.join(args.out, "results.json"), "w") as f:
+        json.dump(RESULTS, f, indent=2)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,62 @@
+"""End-to-end serving driver (the paper's kind of workload, applied to an
+assigned LM architecture): batched requests served by the slot-table
+scheduler — continuous batching IS superstep-sharing (DESIGN.md §4).
+
+Compares capacity C=1 (one request at a time, the "Giraph" regime) with
+C=8 (shared decode rounds): same tokens, far fewer dispatches.
+
+Run:  PYTHONPATH=src python examples/serve_continuous_batching.py [--arch gemma2-9b]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.launch.serve import Request, SlotServer
+from repro.models import transformer as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--requests", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = reduced(get_arch(args.arch))  # full config needs a pod; CPU demo
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(rid, rng.integers(0, cfg.vocab, int(rng.integers(4, 12)),
+                                  dtype=np.int32),
+                max_new_tokens=int(rng.integers(8, 24)))
+        for rid in range(args.requests)
+    ]
+
+    for C in (1, 8):
+        srv = SlotServer(cfg, params, capacity=C, max_len=64)
+        for r in reqs:
+            srv.submit(Request(r.rid, r.prompt, r.max_new_tokens))
+        t0 = time.perf_counter()
+        res = srv.run_until_drained()
+        dt = time.perf_counter() - t0
+        assert len(res) == len(reqs)
+        occ = np.mean(srv.stats.slot_occupancy) if srv.stats.slot_occupancy else 0
+        print(f"== C={C}: {srv.stats.tokens_generated} tokens for {len(reqs)} "
+              f"requests in {dt:.2f}s — {srv.stats.rounds} shared rounds, "
+              f"mean occupancy {occ:.2f}, {srv.stats.tokens_generated/dt:.1f} tok/s")
+
+    # determinism: same request set, same outputs regardless of capacity
+    s1 = SlotServer(cfg, params, capacity=1, max_len=64)
+    s8 = SlotServer(cfg, params, capacity=8, max_len=64)
+    for r in reqs[:4]:
+        s1.submit(Request(r.rid, r.prompt, 8))
+        s8.submit(Request(r.rid, r.prompt, 8))
+    r1, r8 = s1.run_until_drained(), s8.run_until_drained()
+    same = all(np.array_equal(r1[k], r8[k]) for k in r1)
+    print(f"== outputs identical across capacities: {same}")
+
+
+if __name__ == "__main__":
+    main()

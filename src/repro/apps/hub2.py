@@ -1,0 +1,199 @@
+"""Hub²-Labeling for PPSP queries — paper §5.1.2.
+
+The index: pick the k highest-degree vertices as hubs H.  Every vertex
+keeps hub-distance labels L(v) = {<h, d(v,h)>} restricted to *core-hubs*
+(hubs h with no other hub on any shortest v-h path); hubs keep labels to
+all hubs.
+
+Exactly as in the paper, **indexing is itself a Quegel job**: the query set
+is {<h> | h in H}, each query a flagged BFS computing d(h, .) and the
+pre_H(.) flag ("some shortest path from h passes another hub").  The engine
+batches these k BFS queries C at a time under superstep-sharing.
+
+Querying: d_ub = min_{h_s, h_t} d(s,h_s) + d(h_s,h_t) + d(h_t,t) from the
+labels (the paper computes this in 2 supersteps via the aggregator; we fold
+the same reduction into admission), then a BiBFS over the non-hub induced
+subgraph with the early cutoff at superstep 1 + floor(d_ub / 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import QuegelEngine, StepCtx, VertexProgram
+from repro.core.graph import Graph
+from repro.core.semiring import INF, MAX_RIGHT, MIN_RIGHT
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class HubIndex:
+    """The V-data index loaded by every worker before querying."""
+
+    hub_ids: jnp.ndarray  # (k,) int32 vertex ids of hubs
+    is_hub: jnp.ndarray  # (V,) bool
+    hub_dist: jnp.ndarray  # (k, V) int32 d(h, v), INF if unreachable
+    core: jnp.ndarray  # (k, V) bool — h is a core-hub of v (labels kept)
+
+    @property
+    def k(self) -> int:
+        return int(self.hub_ids.shape[0])
+
+    def hub_hub(self) -> jnp.ndarray:
+        """(k, k) pairwise hub distance matrix d(h_i, h_j)."""
+        return self.hub_dist[:, self.hub_ids]
+
+
+def pick_hubs(graph: Graph, k: int, mode: str = "degree") -> np.ndarray:
+    """Top-k degree vertices (paper: in/out/sum for directed; they found the
+    choices similar and report in-degree)."""
+    if mode == "in":
+        deg = np.asarray(graph.in_deg)
+    elif mode == "out":
+        deg = np.asarray(graph.out_deg)
+    else:
+        deg = np.asarray(graph.in_deg) + np.asarray(graph.out_deg)
+    deg = deg[: graph.n_real]
+    return np.argsort(-deg, kind="stable")[:k].astype(np.int32)
+
+
+class HubLabelBFS(VertexProgram):
+    """The indexing query <h>: BFS recording d(h, v) and pre_H(v).
+
+    A vertex's outgoing flag is TRUE when a shortest path from h to it
+    passes a hub other than h (itself counting if it is a hub) — receivers
+    of a TRUE flag have h excluded from their core-hub set.
+    """
+
+    def __init__(self, is_hub: jnp.ndarray):
+        self.is_hub = is_hub
+
+    def init(self, graph: Graph, query, index=None):
+        h = query[0]
+        dist = jnp.full((graph.n,), INF, jnp.int32).at[h].set(0)
+        return dict(
+            dist=dist,
+            pre=jnp.zeros((graph.n,), bool),
+            frontier=jnp.zeros((graph.n,), bool).at[h].set(True),
+        )
+
+    def superstep(self, state, ctx: StepCtx):
+        dist, pre, frontier = state["dist"], state["pre"], state["frontier"]
+        h = ctx.query[0]
+        # flag lane: sender emits 1 iff it is a hub (other than h) or its
+        # own pre flag is set
+        sender_flag = ((self.is_hub & (jnp.arange(dist.shape[0]) != h)) | pre).astype(jnp.int32)
+        got_d = ctx.propagate(MIN_RIGHT, dist, frontier)
+        got_f = ctx.propagate(MAX_RIGHT, sender_flag, frontier)
+        newly = (got_d < INF) & (dist >= INF)
+        dist = jnp.where(newly, ctx.step, dist)
+        pre = pre | (newly & (got_f > 0))
+        done = ~newly.any()
+        return dict(dist=dist, pre=pre, frontier=newly), done
+
+    def extract(self, state, query):
+        return dict(dist=state["dist"], pre=state["pre"])
+
+
+def build_hub_index(graph: Graph, k: int, capacity: int = 8, backend: str = "coo") -> HubIndex:
+    """Run the |H| BFS queries through the engine and assemble the labels."""
+    hubs = pick_hubs(graph, k)
+    is_hub = jnp.zeros((graph.n,), bool).at[jnp.asarray(hubs)].set(True)
+    eng = QuegelEngine(
+        graph,
+        HubLabelBFS(is_hub),
+        capacity,
+        backend=backend,
+        example_query=jnp.zeros((1,), jnp.int32),
+    )
+    qids = [eng.submit(jnp.asarray([h], jnp.int32)) for h in hubs]
+    res = eng.run_until_drained()
+    hub_dist = np.stack([np.asarray(res[q]["dist"]) for q in qids])  # (k, V)
+    pre = np.stack([np.asarray(res[q]["pre"]) for q in qids])  # (k, V)
+    reach = hub_dist < INF
+    is_hub_np = np.asarray(is_hub)
+    # core-hub of v: reachable & no other hub on any shortest path; hubs
+    # always keep all (reachable) hub labels.
+    core = reach & (~pre | is_hub_np[None, :])
+    return HubIndex(
+        hub_ids=jnp.asarray(hubs),
+        is_hub=is_hub,
+        hub_dist=jnp.asarray(hub_dist),
+        core=jnp.asarray(core),
+    )
+
+
+class Hub2PPSP(VertexProgram):
+    """PPSP query using the Hub² index (paper's querying algorithm):
+    BiBFS over the non-hub induced subgraph, upper-bounded by d_ub."""
+
+    def init(self, graph: Graph, query, index: HubIndex = None):
+        s, t = query[0], query[1]
+        lab_s = jnp.where(index.core[:, s], index.hub_dist[:, s], INF)  # (k,)
+        lab_t = jnp.where(index.core[:, t], index.hub_dist[:, t], INF)
+        hh = index.hub_hub()  # (k, k)
+        # d_ub = min_{hs,ht} d(s,hs) + d(hs,ht) + d(ht,t).  Saturating sum in
+        # float32 (int64 unavailable without x64; small sums < 2^24 exact).
+        tot = (
+            jnp.minimum(lab_s, INF)[:, None].astype(jnp.float32)
+            + jnp.minimum(hh, INF).astype(jnp.float32)
+            + jnp.minimum(lab_t, INF)[None, :].astype(jnp.float32)
+        )
+        tmin = tot.min()
+        d_ub = jnp.where(tmin < INF, tmin, INF).astype(jnp.int32)
+        n = graph.n
+        ds = jnp.full((n,), INF, jnp.int32).at[s].set(0)
+        dt = jnp.full((n,), INF, jnp.int32).at[t].set(0)
+        return dict(
+            ds=ds,
+            dt=dt,
+            ff=jnp.zeros((n,), bool).at[s].set(True),
+            fb=jnp.zeros((n,), bool).at[t].set(True),
+            d_ub=d_ub,
+            bibest=jnp.asarray(INF, jnp.int32),
+        )
+
+    def superstep(self, state, ctx: StepCtx):
+        idx: HubIndex = ctx.index
+        ds, dt = state["ds"], state["dt"]
+        got_f = ctx.propagate(MIN_RIGHT, ds, state["ff"])
+        got_b = ctx.propagate(MIN_RIGHT, dt, state["fb"], which="rev")
+        new_f = (got_f < INF) & (ds >= INF)
+        new_b = (got_b < INF) & (dt >= INF)
+        ds = jnp.where(new_f, ctx.step, ds)
+        dt = jnp.where(new_b, ctx.step, dt)
+        # hubs vote to halt immediately: BiBFS explores G[V - H]
+        ff = new_f & ~idx.is_hub
+        fb = new_b & ~idx.is_hub
+        both = jnp.where((ds < INF) & (dt < INF) & ~idx.is_hub, ds + dt, INF)
+        bibest = jnp.minimum(state["bibest"], both.min())
+        # early cutoff (paper): a non-hub vertex bi-reached at superstep
+        # >= 1 + floor(d_ub/2) cannot beat d_ub
+        cutoff = ctx.step >= 1 + state["d_ub"] // 2
+        dead = ~ff.any() | ~fb.any()
+        done = (bibest < INF) | cutoff | dead
+        return dict(
+            ds=ds, dt=dt, ff=ff, fb=fb, d_ub=state["d_ub"], bibest=bibest
+        ), done
+
+    def extract(self, state, query):
+        visited = ((state["ds"] < INF) | (state["dt"] < INF)).sum()
+        return dict(
+            dist=jnp.minimum(state["d_ub"], state["bibest"]), visited=visited
+        )
+
+
+def make_hub2_engine(graph: Graph, index: HubIndex, capacity: int = 8, **kw):
+    rev = graph.reverse()
+    return QuegelEngine(
+        graph,
+        Hub2PPSP(),
+        capacity,
+        index=index,
+        aux_graphs={"rev": (rev, None)},
+        example_query=jnp.zeros((2,), jnp.int32),
+        **kw,
+    )

@@ -1,0 +1,250 @@
+"""XML keyword search — paper §5.2: SLCA, ELCA and MaxMatch semantics.
+
+The XML document is a rooted tree; bitmaps bm(v)[i] ("keyword k_i occurs in
+subtree T_v") flow bottom-up along child->parent edges.  Bitmap lanes are
+kept as 0/1 int32 planes so bitwise-OR combining is the MAX_RIGHT semiring
+(DESIGN.md §2).
+
+Programs:
+  SLCANaive        — every vertex whose bitmap changed forwards it (the
+                     paper's first algorithm; a vertex may send more than
+                     once).
+  SLCALevelAligned — the paper's improved variant: an aggregator tracks
+                     l_max and only vertices at the current level send, so
+                     each vertex sends exactly once.  Computes ELCA labels
+                     in the same pass (bm*_OR of non-all-one child bitmaps).
+  MaxMatch         — phase 1 = level-aligned SLCA while recording each
+                     vertex's multiset of child bitmap values; phase 2 =
+                     top-down propagation from SLCA roots pruning dominated
+                     siblings (K(u1) ⊂ K(u2)).
+
+Index: the per-worker inverted index (tokens table) provides
+init_activate's matching vertices; levels l(v) are pre-computed V-data
+(the paper pre-computes them with a Pregel BFS job).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import QuegelEngine, StepCtx, VertexProgram
+from repro.core.graph import Graph
+from repro.core.semiring import MAX_RIGHT
+from repro.apps.keyword import MAXK, InvertedIndex
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class XMLIndex:
+    tokens: jnp.ndarray  # (V, T) int32 vertex text
+    level: jnp.ndarray  # (V,) int32 depth (root = 0)
+    parent: jnp.ndarray  # (V,) int32, -1 at root
+
+    def match(self, keyword) -> jnp.ndarray:
+        return (self.tokens == keyword).any(axis=1)
+
+
+def build_xml_index(parent: np.ndarray, tokens: np.ndarray, n_pad: int) -> XMLIndex:
+    n = len(parent)
+    level = np.zeros(n, np.int32)
+    for v in range(1, n):  # parents precede children in our generator
+        level[v] = level[parent[v]] + 1
+    pad = n_pad - n
+    return XMLIndex(
+        tokens=jnp.asarray(np.pad(tokens, ((0, pad), (0, 0)), constant_values=-2)),
+        level=jnp.asarray(np.pad(level, (0, pad), constant_values=-1)),
+        parent=jnp.asarray(np.pad(parent, (0, pad), constant_values=-1)),
+    )
+
+
+def _init_bm(graph: Graph, query, index: XMLIndex):
+    def lane(k):
+        return (index.match(k) & (k >= 0)).astype(jnp.int32)
+
+    bm = jax.vmap(lane)(query)  # (MAXK, V)
+    used = (query >= 0).astype(jnp.int32)[:, None]  # (MAXK, 1)
+    return bm, used
+
+
+def _allone(bm, used):
+    return ((bm >= 1) | (used == 0)).all(axis=0) & (used.sum() > 0)
+
+
+class SLCANaive(VertexProgram):
+    def init(self, graph: Graph, query, index: XMLIndex = None):
+        bm, used = _init_bm(graph, query, index)
+        changed = (bm > 0).any(axis=0)
+        return dict(
+            bm=bm,
+            changed=changed,
+            got_allone_child=jnp.zeros((graph.n,), bool),
+        )
+
+    def superstep(self, state, ctx: StepCtx):
+        bm = state["bm"]
+        used = (ctx.query >= 0).astype(jnp.int32)[:, None]
+        allone = _allone(bm, used)
+        lanes = jnp.concatenate([bm, allone[None].astype(jnp.int32)], axis=0)
+        got = ctx.propagate(MAX_RIGHT, lanes, state["changed"][None, :])
+        got = jnp.maximum(got, 0)
+        new_bm = jnp.maximum(bm, got[:MAXK])
+        got_allone = state["got_allone_child"] | (got[MAXK] > 0)
+        changed = (new_bm != bm).any(axis=0)
+        done = ~changed.any()
+        return dict(bm=new_bm, changed=changed, got_allone_child=got_allone), done
+
+    def extract(self, state, query):
+        used = (query >= 0).astype(jnp.int32)[:, None]
+        slca = _allone(state["bm"], used) & ~state["got_allone_child"]
+        return dict(slca=slca, num=slca.sum())
+
+
+class SLCALevelAligned(VertexProgram):
+    """One send per vertex; also labels ELCAs.  l_max comes from the
+    aggregator (here: a max-reduction at init) and decrements per step."""
+
+    def init(self, graph: Graph, query, index: XMLIndex = None):
+        bm, used = _init_bm(graph, query, index)
+        matching = (bm > 0).any(axis=0)
+        lmax = jnp.where(matching, index.level, -1).max()
+        return dict(
+            bm=bm,
+            own=bm,  # init (own-text) bits, frozen — needed for ELCA
+            got_allone_child=jnp.zeros((graph.n,), bool),
+            elca_extra=jnp.zeros((MAXK, graph.n), jnp.int32),
+            lmax=lmax,
+        )
+
+    def superstep(self, state, ctx: StepCtx):
+        idx: XMLIndex = ctx.index
+        bm = state["bm"]
+        cur = state["lmax"]
+        used = (ctx.query >= 0).astype(jnp.int32)[:, None]
+        allone = _allone(bm, used)
+        senders = (idx.level == cur) & (bm > 0).any(axis=0)
+        # lanes: bm, allone flag, bm masked to non-all-one senders (for ELCA)
+        nao = jnp.where(allone[None], 0, bm)
+        lanes = jnp.concatenate(
+            [bm, allone[None].astype(jnp.int32), nao], axis=0
+        )
+        got = jnp.maximum(ctx.propagate(MAX_RIGHT, lanes, senders[None, :]), 0)
+        new_bm = jnp.maximum(bm, got[:MAXK])
+        got_allone = state["got_allone_child"] | (got[MAXK] > 0)
+        elca_extra = jnp.maximum(state["elca_extra"], got[MAXK + 1 :])
+        done = cur <= 0
+        return (
+            dict(
+                bm=new_bm,
+                own=state["own"],
+                got_allone_child=got_allone,
+                elca_extra=elca_extra,
+                lmax=cur - 1,
+            ),
+            done,
+        )
+
+    def extract(self, state, query):
+        used = (query >= 0).astype(jnp.int32)[:, None]
+        slca = _allone(state["bm"], used) & ~state["got_allone_child"]
+        # ELCA (paper): bm*_OR = own bits (bm before its single update) OR
+        # the non-all-one child subtree bitmaps; all-one => ELCA.
+        elca = _allone(jnp.maximum(state["own"], state["elca_extra"]), used)
+        return dict(slca=slca, num=slca.sum(), elca=elca, num_elca=elca.sum())
+
+
+class MaxMatch(VertexProgram):
+    """Phase 1: level-aligned SLCA recording child bitmap values;
+    Phase 2: top-down labeling from SLCAs, pruning dominated siblings."""
+
+    def init(self, graph: Graph, query, index: XMLIndex = None):
+        bm, used = _init_bm(graph, query, index)
+        matching = (bm > 0).any(axis=0)
+        lmax = jnp.where(matching, index.level, -1).max()
+        nvals = 1 << MAXK
+        return dict(
+            bm=bm,
+            got_allone_child=jnp.zeros((graph.n,), bool),
+            child_vals=jnp.zeros((nvals, graph.n), jnp.int32),
+            lmax=lmax,
+            phase=jnp.asarray(1, jnp.int32),
+            labeled=jnp.zeros((graph.n,), bool),
+            cur_down=jnp.asarray(0, jnp.int32),
+        )
+
+    def _bmval(self, bm):
+        weights = (1 << jnp.arange(MAXK, dtype=jnp.int32))[:, None]
+        return (bm * weights).sum(axis=0)  # (V,)
+
+    def superstep(self, state, ctx: StepCtx):
+        idx: XMLIndex = ctx.index
+        used = (ctx.query >= 0).astype(jnp.int32)[:, None]
+        nvals = 1 << MAXK
+
+        # ---------------- phase 1: upward, level-aligned
+        bm = state["bm"]
+        cur = state["lmax"]
+        allone = _allone(bm, used)
+        senders = (idx.level == cur) & (bm > 0).any(axis=0)
+        bmval = self._bmval(bm)
+        onehot = (bmval[None, :] == jnp.arange(nvals)[:, None]).astype(jnp.int32)
+        lanes = jnp.concatenate([bm, allone[None].astype(jnp.int32), onehot], axis=0)
+        got = jnp.maximum(ctx.propagate(MAX_RIGHT, lanes, senders[None, :]), 0)
+        bm1 = jnp.maximum(bm, got[:MAXK])
+        got_allone1 = state["got_allone_child"] | (got[MAXK] > 0)
+        child_vals1 = jnp.maximum(state["child_vals"], got[MAXK + 1 :])
+        phase1_done = cur <= 0
+
+        # ---------------- phase 2: downward from SLCAs
+        slca = _allone(state["bm"], used) & ~state["got_allone_child"]
+        # dominated(v): some sibling value b' strictly contains bmval(v)
+        myval = self._bmval(state["bm"])
+        pa = jnp.maximum(idx.parent, 0)
+        sib_vals = state["child_vals"][:, pa]  # (nvals, V) present among siblings
+        b = jnp.arange(nvals)[:, None]
+        strict_sup = ((myval[None, :] & b) == myval[None, :]) & (b != myval[None, :])
+        dominated = ((sib_vals > 0) & strict_sup).any(axis=0) & (idx.parent >= 0)
+        down_senders = state["labeled"] & (idx.level == state["cur_down"] - 1)
+        got_lab = ctx.propagate(
+            MAX_RIGHT,
+            state["labeled"].astype(jnp.int32)[None, :],
+            down_senders[None, :],
+            which="down",
+        )[0]
+        labeled2 = state["labeled"] | (
+            (idx.level == state["cur_down"])
+            & (slca | ((got_lab > 0) & ~dominated))
+        )
+        maxlev = idx.level.max()
+        phase2_done = state["cur_down"] > maxlev
+
+        in_p1 = state["phase"] == 1
+        new_state = dict(
+            bm=jnp.where(in_p1, bm1, state["bm"]),
+            got_allone_child=jnp.where(in_p1, got_allone1, state["got_allone_child"]),
+            child_vals=jnp.where(in_p1, child_vals1, state["child_vals"]),
+            lmax=jnp.where(in_p1, cur - 1, state["lmax"]),
+            phase=jnp.where(in_p1 & phase1_done, 2, state["phase"]),
+            labeled=jnp.where(in_p1, state["labeled"], labeled2),
+            cur_down=jnp.where(in_p1, 0, state["cur_down"] + 1),
+        )
+        done = ~in_p1 & phase2_done
+        return new_state, done
+
+    def extract(self, state, query):
+        return dict(labeled=state["labeled"], num=state["labeled"].sum())
+
+
+def make_xml_engine(program_cls, up_graph: Graph, index: XMLIndex, capacity: int = 8, **kw):
+    down = up_graph.reverse()
+    return QuegelEngine(
+        up_graph,
+        program_cls(),
+        capacity,
+        index=index,
+        aux_graphs={"down": (down, None)},
+        example_query=jnp.full((MAXK,), -1, jnp.int32),
+        **kw,
+    )

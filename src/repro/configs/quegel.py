@@ -1,0 +1,11 @@
+"""The paper's own workload config: graph-engine defaults (not an LM)."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class QuegelConfig:
+    capacity: int = 8          # the paper's C (saturates ~8 on their GbE)
+    backend: str = "coo"       # coo | blocks_ref | pallas
+    block_size: int = 128      # Pallas tile edge
+    hub_k: int = 1000          # Hub^2 hubs (paper: 100/1000)
+    partition: str = "dst"     # distributed combine scheme

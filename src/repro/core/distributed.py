@@ -1,0 +1,145 @@
+"""Distributed frontier propagation via shard_map — Quegel's worker
+partitioning mapped onto a TPU mesh (DESIGN.md §2).
+
+Quegel hash-partitions vertices across workers and routes point-to-point
+messages.  On a TPU mesh we partition *edges* and replace routing with one
+collective per super-round:
+
+  partition="dst" (default) — each device owns a contiguous destination
+      block; it combines messages for its block from the (replicated)
+      frontier values, then the blocks are all-gathered.  Collective bytes
+      per round: |V| * C * dtype (an all-gather of the result).  This is
+      Pregel+'s receiver-side combiner taken to its limit: combining
+      happens *before* any data crosses the interconnect.
+
+  partition="src" — each device owns a source block and produces a dense
+      partial combine for *all* destinations; partials are reduced with a
+      min/max/sum all-reduce.  More collective bytes (|V| * C * log-ish)
+      but immune to destination-degree skew (the paper's hub problem).
+
+Both paths produce results identical to the single-device reference; the
+roofline pass (EXPERIMENTS.md §Perf) compares their collective terms.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.graph import Graph
+from repro.core.semiring import Semiring
+from repro.kernels import ref
+
+
+def _pad_partition(ids_sorted_key, src, dst, w, n_parts, key_of):
+    """Split COO edges into n_parts buckets by key_of, padding to equal size."""
+    buckets = [[] for _ in range(n_parts)]
+    for e in range(len(src)):
+        buckets[key_of(e)].append(e)
+    emax = max(1, max(len(b) for b in buckets))
+    srcp = np.zeros((n_parts, emax), np.int32)
+    dstp = np.zeros((n_parts, emax), np.int32)
+    wp = np.zeros((n_parts, emax), w.dtype)
+    valid = np.zeros((n_parts, emax), bool)
+    for p, b in enumerate(buckets):
+        k = len(b)
+        srcp[p, :k] = src[b]
+        dstp[p, :k] = dst[b]
+        wp[p, :k] = w[b]
+        valid[p, :k] = True
+    return srcp, dstp, wp, valid
+
+
+class ShardedGraph:
+    """Edge partitions of a Graph for a mesh axis of size n_parts."""
+
+    def __init__(self, graph: Graph, n_parts: int, partition: str = "dst"):
+        assert graph.n % n_parts == 0, "pad |V| to a multiple of the mesh axis"
+        self.graph = graph
+        self.n_parts = n_parts
+        self.partition = partition
+        self.block = graph.n // n_parts
+        src = np.asarray(graph.src)
+        dst = np.asarray(graph.dst)
+        w = np.asarray(graph.w)
+        key = (dst if partition == "dst" else src) // self.block
+        srcp, dstp, wp, valid = _pad_partition(None, src, dst, w, n_parts, lambda e: key[e])
+        self.srcp = jnp.asarray(srcp)
+        self.dstp = jnp.asarray(dstp)
+        self.wp = jnp.asarray(wp)
+        self.valid = jnp.asarray(valid)
+
+
+def make_propagate_sharded(sg: ShardedGraph, mesh: Mesh, axis: str, sr: Semiring):
+    """Returns a jit-able propagate(x, frontier) -> (C, V) replicated."""
+    block, n = sg.block, sg.graph.n
+
+    def local_combine(xf, srcp, dstp, wp, valid, dst_offset):
+        msgs = ref.apply_mul(sr, xf[:, srcp], wp)
+        add_id = jnp.asarray(sr.add_id, xf.dtype)
+        msgs = jnp.where(valid[None, :], msgs, add_id)
+        seg = dstp - dst_offset
+
+        def one(m):
+            out = sr.segment_combine(m, seg, block if sg.partition == "dst" else n)
+            if sr.name in ("min_plus", "min_right"):
+                return jnp.minimum(out, add_id)
+            if sr.name in ("max_plus", "max_right"):
+                return jnp.maximum(out, add_id)
+            return out
+
+        return jax.vmap(one)(msgs)
+
+    if sg.partition == "dst":
+
+        def body(x, srcp, dstp, wp, valid):
+            # srcp etc. are this device's shard (1, Emax) under shard_map
+            i = jax.lax.axis_index(axis)
+            y_local = local_combine(x, srcp[0], dstp[0], wp[0], valid[0], i * block)
+            return jax.lax.all_gather(y_local, axis, axis=1, tiled=True)
+
+        spec_e = P(axis, None)
+
+        @jax.jit
+        def propagate(x, frontier=None):
+            if frontier is not None:
+                x = jnp.where(frontier, x, jnp.asarray(sr.add_id, x.dtype))
+            f = jax.shard_map(
+                body,
+                mesh=mesh,
+                in_specs=(P(None, None), spec_e, spec_e, spec_e, spec_e),
+                out_specs=P(None, None),
+                check_vma=False,
+            )
+            return f(x, sg.srcp, sg.dstp, sg.wp, sg.valid)
+
+    else:  # src partition: dense partials + reduction collective
+
+        def body(x, srcp, dstp, wp, valid):
+            y_part = local_combine(x, srcp[0], dstp[0], wp[0], valid[0], 0)
+            if sr.name in ("min_plus", "min_right"):
+                return jax.lax.pmin(y_part, axis)
+            if sr.name in ("max_plus", "max_right"):
+                return jax.lax.pmax(y_part, axis)
+            return jax.lax.psum(y_part, axis)
+
+        spec_e = P(axis, None)
+
+        @jax.jit
+        def propagate(x, frontier=None):
+            if frontier is not None:
+                x = jnp.where(frontier, x, jnp.asarray(sr.add_id, x.dtype))
+            f = jax.shard_map(
+                body,
+                mesh=mesh,
+                in_specs=(P(None, None), spec_e, spec_e, spec_e, spec_e),
+                out_specs=P(None, None),
+                check_vma=False,
+            )
+            return f(x, sg.srcp, sg.dstp, sg.wp, sg.valid)
+
+    return propagate

@@ -1,0 +1,277 @@
+"""The Quegel engine: query-centric superstep-sharing on JAX.
+
+The paper's central idea (§3.1): up to ``C`` concurrent queries each advance
+one superstep per *super-round*, sharing a single synchronization barrier.
+Here a super-round is **one jitted dispatch**: per-query state lives in a
+dense slot table (leading axis C) and the vertex program is ``vmap``-ed over
+slots.  The single device->host sync per round (reading the ``done`` flags)
+is the analogue of the paper's one barrier per super-round.
+
+Data taxonomy (paper §3.2) maps as:
+  V-data  : the ``Graph``/index arrays, closed over by the jitted round —
+            loaded once, shared by all queries (decoupled from querying).
+  VQ-data : slot-table leaves of shape (C, V, ...), lazily *initialized*
+            (not lazily allocated — DESIGN.md §2) at admission.
+  Q-data  : slot-table leaves of shape (C, ...) — query content, per-query
+            superstep counter, live/done flags, aggregator scratch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import BlockSparse, Graph
+from repro.core.semiring import Semiring
+from repro.kernels import ops
+
+
+def tree_where(pred, a, b):
+    """Select whole pytrees by a scalar (or per-slot) predicate."""
+    def sel(x, y):
+        p = pred
+        while p.ndim < x.ndim:
+            p = p[..., None]
+        return jnp.where(p, x, y)
+
+    return jax.tree.map(sel, a, b)
+
+
+@dataclasses.dataclass
+class StepCtx:
+    """Everything ``superstep`` may touch besides its own VQ/Q-data."""
+
+    graph: Graph
+    query: Any  # this slot's query content (unstacked)
+    step: jnp.ndarray  # scalar int32, 1-based as in Pregel/Quegel
+    propagate: Callable  # (semiring, x, frontier) -> combined messages
+    index: Any = None  # optional V-data index (hub labels, inverted index..)
+
+
+class VertexProgram:
+    """Base class users subclass per query type (paper §4).
+
+    ``init(graph, query, index)``   -> fresh VQ/Q-data pytree for one query
+                                       (the `init_value`/`init_activate` pair:
+                                       programs set their own initial frontier
+                                       from the query + index).
+    ``superstep(state, ctx)``       -> (state, done) — one Pregel superstep
+                                       for one query; vectorized over V.
+    ``extract(state, query)``       -> small result pytree (reported to the
+                                       console / dumped, paper's last round).
+    """
+
+    def init(self, graph: Graph, query, index=None):
+        raise NotImplementedError
+
+    def superstep(self, state, ctx: StepCtx):
+        raise NotImplementedError
+
+    def extract(self, state, query):
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class EngineStats:
+    super_rounds: int = 0
+    barriers: int = 0  # == super_rounds: one sync per round by construction
+    queries_done: int = 0
+    supersteps_total: int = 0
+    round_times: list = dataclasses.field(default_factory=list)
+
+    @property
+    def wall_time(self) -> float:
+        return float(sum(self.round_times))
+
+
+class QuegelEngine:
+    """Superstep-sharing scheduler (paper §3).
+
+    capacity  : the paper's C — max queries in flight per super-round.
+    backend   : 'coo' (segment ops), 'blocks_ref', or 'pallas'.
+    """
+
+    def __init__(
+        self,
+        graph: Graph,
+        program: VertexProgram,
+        capacity: int = 8,
+        *,
+        index: Any = None,
+        backend: str = "coo",
+        blocks: Optional[BlockSparse] = None,
+        aux_graphs: Optional[dict] = None,
+        interpret: bool = True,
+        example_query: Any = None,
+        propagate_override: Optional[dict] = None,
+    ):
+        """``propagate_override`` maps a view name ('default', 'rev', ...)
+        to a callable (semiring, x, frontier) -> y, e.g. the shard_map
+        propagation of core.distributed — the engine is agnostic to how
+        messages move (single device, Pallas tiles, or a TPU mesh)."""
+        self.graph = graph
+        self.program = program
+        self.capacity = int(capacity)
+        self.index = index
+        self.backend = backend
+        self.blocks = blocks
+        # named alternate propagation views, e.g. {"rev": (reverse_graph,
+        # reverse_blocks)} for backward BFS
+        self.aux_graphs = {k: (g_, b_) for k, (g_, b_) in (aux_graphs or {}).items()}
+        self.propagate_override = dict(propagate_override or {})
+        self.interpret = interpret
+        self._queue: list[tuple[int, Any]] = []
+        self._next_qid = 0
+        self._results: dict[int, Any] = {}
+        self._slot_qid: dict[int, int] = {}
+        self.stats = EngineStats()
+        if example_query is None:
+            raise ValueError("example_query required to shape the slot table")
+        self._build(example_query)
+
+    # ------------------------------------------------------------ plumbing
+    def _propagate(self, sr: Semiring, x, frontier=None, which: str = "default"):
+        if which in self.propagate_override:
+            return self.propagate_override[which](sr, x, frontier)
+        if which == "default":
+            g, b = self.graph, self.blocks
+        else:
+            g, b = self.aux_graphs[which]
+        return ops.propagate(
+            g,
+            sr,
+            x,
+            frontier,
+            blocks=b,
+            backend=self.backend,
+            interpret=self.interpret,
+        )
+
+    def _build(self, example_query):
+        g, prog, C = self.graph, self.program, self.capacity
+        proto_q = jax.tree.map(jnp.asarray, example_query)
+        proto_state = prog.init(g, proto_q, self.index)
+
+        def stack(proto):
+            return jax.tree.map(lambda x: jnp.zeros((C,) + jnp.shape(x), jnp.asarray(x).dtype), proto)
+
+        self._slots = dict(
+            state=stack(proto_state),
+            query=stack(proto_q),
+            step=jnp.zeros((C,), jnp.int32),
+            live=jnp.zeros((C,), bool),
+            done=jnp.zeros((C,), bool),
+        )
+
+        def admit(slots, idx, query):
+            st = prog.init(g, query, self.index)
+            slots = dict(slots)
+            slots["state"] = jax.tree.map(
+                lambda tab, v: tab.at[idx].set(v), slots["state"], st
+            )
+            slots["query"] = jax.tree.map(
+                lambda tab, v: tab.at[idx].set(v), slots["query"], query
+            )
+            slots["step"] = slots["step"].at[idx].set(0)
+            slots["live"] = slots["live"].at[idx].set(True)
+            slots["done"] = slots["done"].at[idx].set(False)
+            return slots
+
+        def super_round(slots):
+            def one(state, query, step, live):
+                ctx = StepCtx(
+                    graph=g,
+                    query=query,
+                    step=step + 1,  # Pregel supersteps are 1-based
+                    propagate=self._propagate,
+                    index=self.index,
+                )
+                new_state, done = prog.superstep(state, ctx)
+                state = tree_where(live, new_state, state)
+                return state, done & live
+
+            state, done = jax.vmap(one)(
+                slots["state"], slots["query"], slots["step"], slots["live"]
+            )
+            live = slots["live"]
+            return dict(
+                state=state,
+                query=slots["query"],
+                step=slots["step"] + live.astype(jnp.int32),
+                live=live & ~done,
+                done=done,
+            )
+
+        def extract(slots, idx):
+            st = jax.tree.map(lambda tab: tab[idx], slots["state"])
+            q = jax.tree.map(lambda tab: tab[idx], slots["query"])
+            return prog.extract(st, q)
+
+        self._admit = jax.jit(admit)
+        self._super_round = jax.jit(super_round)
+        self._extract = jax.jit(extract)
+
+    # -------------------------------------------------------------- client
+    def submit(self, query) -> int:
+        """Append a query to the queue (paper: console or batch file)."""
+        qid = self._next_qid
+        self._next_qid += 1
+        self._queue.append((qid, jax.tree.map(jnp.asarray, query)))
+        return qid
+
+    def _free_slots(self) -> list[int]:
+        live = np.asarray(self._slots["live"])
+        return [i for i in range(self.capacity) if not live[i]]
+
+    def run_round(self) -> list[tuple[int, Any]]:
+        """One super-round: admit from queue, advance all live slots one
+        superstep, collect finished queries.  Returns [(qid, result)]."""
+        t0 = time.perf_counter()
+        # admission (paper: fetch as many queries as capacity permits)
+        free = self._free_slots()
+        admitted = {}
+        while free and self._queue:
+            slot = free.pop()
+            qid, q = self._queue.pop(0)
+            self._slots = self._admit(self._slots, slot, q)
+            admitted[slot] = qid
+            self._slot_qid[slot] = qid
+        if not np.asarray(self._slots["live"]).any():
+            return []
+        self._slots = self._super_round(self._slots)
+        # THE barrier: one device->host sync per super-round
+        done = np.asarray(self._slots["done"])
+        steps = np.asarray(self._slots["step"])
+        out = []
+        for slot in np.nonzero(done)[0]:
+            qid = self._slot_qid[int(slot)]
+            res = jax.tree.map(np.asarray, self._extract(self._slots, int(slot)))
+            self._results[qid] = res
+            self.stats.queries_done += 1
+            self.stats.supersteps_total += int(steps[slot])
+            out.append((qid, res))
+        self.stats.super_rounds += 1
+        self.stats.barriers += 1
+        self.stats.round_times.append(time.perf_counter() - t0)
+        return out
+
+    def run_until_drained(self, max_rounds: int = 100_000) -> dict[int, Any]:
+        """Batch-querying mode (paper scenario ii)."""
+        rounds = 0
+        while (self._queue or np.asarray(self._slots["live"]).any()) and rounds < max_rounds:
+            self.run_round()
+            rounds += 1
+        return dict(self._results)
+
+    def query(self, q, max_rounds: int = 100_000):
+        """Interactive mode (paper scenario i): submit and wait."""
+        qid = self.submit(q)
+        rounds = 0
+        while qid not in self._results and rounds < max_rounds:
+            self.run_round()
+            rounds += 1
+        return self._results[qid]

@@ -1,0 +1,337 @@
+"""Graph containers and generators.
+
+Two adjacency views coexist:
+
+* **COO-sorted-by-destination** — drives the pure-jnp reference propagation
+  (``jax.ops.segment_min`` & friends).  Exact, used for correctness oracles
+  and small graphs.
+* **Block-sparse dense tiles** — the TPU-native format consumed by the
+  Pallas frontier kernel.  Vertices are padded to a multiple of ``block``
+  and the adjacency is stored as a list of dense ``(block, block)`` weight
+  tiles per destination block.  A Pregel superstep then becomes a
+  block-sparse *semiring matmul*: regular, MXU/VPU-shaped, no scatter.
+
+This is the central hardware adaptation (DESIGN.md §2): Quegel's per-vertex
+message queues become dense tile algebra.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.semiring import INF, Semiring
+
+
+def _pad_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class BlockSparse:
+    """Block-sparse adjacency for one propagation direction.
+
+    ``src_ids[i, k]`` is the source vertex-block feeding destination block
+    ``i`` in slot ``k`` (padded slots point at an identity tile).
+    ``tiles[i, k]`` is the dense ``(B, B)`` edge-weight tile; absent edges
+    hold the semiring's add-identity so they contribute nothing.
+    """
+
+    src_ids: jnp.ndarray  # (nb, max_bpr) int32
+    tiles: jnp.ndarray  # (nb, max_bpr, B, B) weight dtype
+    block: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def num_dst_blocks(self) -> int:
+        return self.src_ids.shape[0]
+
+    @property
+    def max_bpr(self) -> int:
+        return self.src_ids.shape[1]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Graph:
+    """An immutable directed graph, padded to ``n`` vertices.
+
+    Propagation always flows src -> dst along ``edges``; for backward
+    traversal use :meth:`reverse`.  Vertices in ``[n_real, n)`` are padding
+    and never carry edges.
+    """
+
+    n: int = dataclasses.field(metadata=dict(static=True))
+    n_real: int = dataclasses.field(metadata=dict(static=True))
+    src: jnp.ndarray  # (E,) int32, sorted by dst
+    dst: jnp.ndarray  # (E,) int32, sorted
+    w: jnp.ndarray  # (E,) int32 or float32 edge weights
+    in_deg: jnp.ndarray  # (n,) int32
+    out_deg: jnp.ndarray  # (n,) int32
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.src.shape[0])
+
+    # ---------------------------------------------------------------- build
+    @staticmethod
+    def from_edges(
+        src,
+        dst,
+        n: int,
+        w=None,
+        pad_to: int = 1,
+        weight_dtype=np.int32,
+    ) -> "Graph":
+        src = np.asarray(src, dtype=np.int32)
+        dst = np.asarray(dst, dtype=np.int32)
+        if w is None:
+            w = np.ones_like(src, dtype=weight_dtype)
+        else:
+            w = np.asarray(w, dtype=weight_dtype)
+        order = np.argsort(dst, kind="stable")
+        src, dst, w = src[order], dst[order], w[order]
+        n_pad = _pad_to(max(n, 1), pad_to)
+        in_deg = np.bincount(dst, minlength=n_pad).astype(np.int32)
+        out_deg = np.bincount(src, minlength=n_pad).astype(np.int32)
+        return Graph(
+            n=n_pad,
+            n_real=n,
+            src=jnp.asarray(src),
+            dst=jnp.asarray(dst),
+            w=jnp.asarray(w),
+            in_deg=jnp.asarray(in_deg),
+            out_deg=jnp.asarray(out_deg),
+        )
+
+    def reverse(self) -> "Graph":
+        order = jnp.argsort(self.src, stable=True)
+        return Graph(
+            n=self.n,
+            n_real=self.n_real,
+            src=self.dst[order],
+            dst=self.src[order],
+            w=self.w[order],
+            in_deg=self.out_deg,
+            out_deg=self.in_deg,
+        )
+
+    def undirected(self) -> "Graph":
+        s = np.asarray(self.src)
+        d = np.asarray(self.dst)
+        w = np.asarray(self.w)
+        return Graph.from_edges(
+            np.concatenate([s, d]),
+            np.concatenate([d, s]),
+            self.n_real,
+            w=np.concatenate([w, w]),
+            pad_to=self.n // max(self.n_real, 1) and self.n or 1,
+            weight_dtype=w.dtype,
+        )
+
+    # ------------------------------------------------------- block-sparse
+    def to_blocks(self, block: int, add_id, dtype=None) -> BlockSparse:
+        """Materialize the block-sparse dense-tile adjacency.
+
+        ``add_id`` fills absent-edge entries (INF for min semirings, 0 for
+        OR/sum).  Multi-edges keep the *best* weight under min semantics
+        (callers with sum semantics must pre-combine duplicates).
+        """
+        src = np.asarray(self.src)
+        dst = np.asarray(self.dst)
+        w = np.asarray(self.w)
+        dtype = dtype or w.dtype
+        nb = _pad_to(self.n, block) // block
+        sb = src // block
+        db = dst // block
+        pair = db.astype(np.int64) * nb + sb
+        uniq = np.unique(pair)
+        # map (dst block) -> list of src blocks
+        rows = [[] for _ in range(nb)]
+        for p in uniq:
+            rows[int(p // nb)].append(int(p % nb))
+        max_bpr = max(1, max((len(r) for r in rows), default=1))
+        src_ids = np.zeros((nb, max_bpr), dtype=np.int32)
+        tiles = np.full((nb, max_bpr, block, block), add_id, dtype=dtype)
+        slot_of = {}
+        for i, r in enumerate(rows):
+            for k, sblk in enumerate(r):
+                src_ids[i, k] = sblk
+                slot_of[(i, sblk)] = k
+        # padded slots point at block 0 with identity tiles (already filled)
+        for e in range(len(src)):
+            i, sblk = int(db[e]), int(sb[e])
+            k = slot_of[(i, sblk)]
+            r, c = int(src[e] % block), int(dst[e] % block)
+            if np.issubdtype(tiles.dtype, np.unsignedinteger):
+                tiles[i, k, r, c] |= w[e]
+            elif add_id == 0:
+                tiles[i, k, r, c] += w[e]
+            elif add_id > 0:  # min semirings: keep best (smallest) weight
+                tiles[i, k, r, c] = min(tiles[i, k, r, c], w[e])
+            else:  # max semirings: presence must exceed the -INF fill
+                tiles[i, k, r, c] = max(tiles[i, k, r, c], w[e])
+        return BlockSparse(
+            src_ids=jnp.asarray(src_ids),
+            tiles=jnp.asarray(tiles),
+            block=block,
+        )
+
+
+# ------------------------------------------------------------- generators
+def barabasi_albert(n: int, m: int, seed: int = 0, directed: bool = False) -> Graph:
+    """Preferential-attachment graph: the skewed-degree ('hub') setting the
+    paper's Hub^2 index targets."""
+    rng = np.random.default_rng(seed)
+    targets = list(range(m))
+    repeated: list[int] = list(range(m))
+    src_l, dst_l = [], []
+    for v in range(m, n):
+        picks = rng.choice(repeated, size=m, replace=True) if repeated else rng.integers(0, v, m)
+        picks = np.unique(picks)
+        for t in picks:
+            src_l.append(v)
+            dst_l.append(int(t))
+            repeated.extend([v, int(t)])
+    src = np.array(src_l, dtype=np.int32)
+    dst = np.array(dst_l, dtype=np.int32)
+    if not directed:
+        src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+    # dedupe
+    key = src.astype(np.int64) * n + dst
+    _, idx = np.unique(key, return_index=True)
+    return Graph.from_edges(src[idx], dst[idx], n)
+
+
+def random_graph(n: int, avg_deg: float, seed: int = 0, directed: bool = True) -> Graph:
+    rng = np.random.default_rng(seed)
+    e = int(n * avg_deg)
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    if not directed:
+        src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+    key = src.astype(np.int64) * n + dst
+    _, idx = np.unique(key, return_index=True)
+    return Graph.from_edges(src[idx], dst[idx], n)
+
+
+def multi_component_graph(n_components: int, comp_size: int, avg_deg: float, seed: int = 0) -> Graph:
+    """Many small CCs — the BTC-like regime where most (s,t) are unreachable."""
+    rng = np.random.default_rng(seed)
+    src_l, dst_l = [], []
+    for c in range(n_components):
+        base = c * comp_size
+        e = int(comp_size * avg_deg)
+        s = rng.integers(0, comp_size, e) + base
+        d = rng.integers(0, comp_size, e) + base
+        keep = s != d
+        src_l.append(s[keep])
+        dst_l.append(d[keep])
+    src = np.concatenate(src_l).astype(np.int32)
+    dst = np.concatenate(dst_l).astype(np.int32)
+    n = n_components * comp_size
+    src2, dst2 = np.concatenate([src, dst]), np.concatenate([dst, src])
+    key = src2.astype(np.int64) * n + dst2
+    _, idx = np.unique(key, return_index=True)
+    return Graph.from_edges(src2[idx], dst2[idx], n)
+
+
+def random_dag(n: int, avg_deg: float, seed: int = 0) -> Graph:
+    """DAG via random topological order — the reachability-query substrate."""
+    rng = np.random.default_rng(seed)
+    e = int(n * avg_deg)
+    a = rng.integers(0, n, e).astype(np.int32)
+    b = rng.integers(0, n, e).astype(np.int32)
+    src, dst = np.minimum(a, b), np.maximum(a, b)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    key = src.astype(np.int64) * n + dst
+    _, idx = np.unique(key, return_index=True)
+    return Graph.from_edges(src[idx], dst[idx], n)
+
+
+def random_tree(n: int, max_fanout: int = 8, seed: int = 0,
+                deep: bool = False) -> tuple[Graph, np.ndarray]:
+    """Rooted tree (child->parent edges) modeling an XML document.
+
+    Default is shallow (parent drawn uniformly from earlier vertices →
+    O(log n) depth, like real XML); ``deep=True`` uses a locality window
+    giving O(n) depth for stress-testing level-aligned algorithms.
+    Returns the graph with edges child->parent (upward propagation — the
+    direction SLCA/ELCA bitmaps flow) plus the parent array (parent[0] = -1).
+    """
+    rng = np.random.default_rng(seed)
+    parent = np.full(n, -1, dtype=np.int32)
+    for v in range(1, n):
+        lo = max(0, v - max_fanout * 4) if deep else 0
+        parent[v] = rng.integers(lo, v)
+    src = np.arange(1, n, dtype=np.int32)
+    dst = parent[1:]
+    g = Graph.from_edges(src, dst, n)
+    return g, parent
+
+
+def grid_terrain(
+    rows: int,
+    cols: int,
+    eps_subdiv: int = 1,
+    seed: int = 0,
+) -> tuple[Graph, np.ndarray]:
+    """The paper's §5.3 terrain network: an elevation mesh with per-cell
+    shortcut edges (diagonals), Euclidean-3D edge weights.
+
+    Returns (graph, coords) where coords is (n, 3) float32 positions.
+    ``eps_subdiv`` > 1 splits each cell edge, adding the shortcut vertices of
+    Fig. 4(b); eps_subdiv=1 keeps the plain 8-connected mesh with diagonals.
+    """
+    rng = np.random.default_rng(seed)
+    r = rows * eps_subdiv - (eps_subdiv - 1)
+    c = cols * eps_subdiv - (eps_subdiv - 1)
+    # smooth hills (~real DEM roughness at 10m sampling) + mild noise
+    yy0, xx0 = np.meshgrid(np.arange(rows), np.arange(cols), indexing="ij")
+    elev = (
+        12.0 * np.sin(yy0 / 6.0) * np.cos(xx0 / 7.0)
+        + 6.0 * np.sin((yy0 + xx0) / 11.0)
+        + rng.random((rows, cols)) * 1.5
+    ).astype(np.float32)
+    # bilinear-interpolate elevation at subdivided resolution (paper: TIN
+    # interpolates too)
+    yi = np.linspace(0, rows - 1, r)
+    xi = np.linspace(0, cols - 1, c)
+    y0 = np.clip(yi.astype(int), 0, rows - 2)
+    x0 = np.clip(xi.astype(int), 0, cols - 2)
+    fy = (yi - y0)[:, None]
+    fx = (xi - x0)[None, :]
+    z = (
+        elev[y0][:, x0] * (1 - fy) * (1 - fx)
+        + elev[y0 + 1][:, x0] * fy * (1 - fx)
+        + elev[y0][:, x0 + 1] * (1 - fy) * fx
+        + elev[y0 + 1][:, x0 + 1] * fy * fx
+    ).astype(np.float32)
+    spacing = 10.0 / eps_subdiv  # 10m sampling interval, subdivided
+    ys, xs = np.meshgrid(np.arange(r), np.arange(c), indexing="ij")
+    coords = np.stack(
+        [xs.ravel() * spacing, ys.ravel() * spacing, z.ravel()], axis=1
+    ).astype(np.float32)
+    n = r * c
+    vid = lambda y, x: y * c + x
+    src_l, dst_l = [], []
+    # 8-connected: horizontal, vertical, both diagonals (cell shortcuts)
+    for dy, dx in ((0, 1), (1, 0), (1, 1), (1, -1)):
+        y = np.arange(max(0, -dy), r - max(0, dy))
+        x = np.arange(max(0, -dx), c - max(0, dx))
+        yy, xx = np.meshgrid(y, x, indexing="ij")
+        a = vid(yy, xx).ravel()
+        b = vid(yy + dy, xx + dx).ravel()
+        src_l += [a, b]
+        dst_l += [b, a]
+    src = np.concatenate(src_l).astype(np.int32)
+    dst = np.concatenate(dst_l).astype(np.int32)
+    w = np.linalg.norm(coords[src] - coords[dst], axis=1).astype(np.float32)
+    g = Graph.from_edges(src, dst, n, w=w, weight_dtype=np.float32)
+    return g, coords

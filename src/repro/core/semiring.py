@@ -1,0 +1,77 @@
+"""Semirings: the TPU-native formulation of Pregel message combining.
+
+One superstep of a Pregel program *with a combiner* is exactly a generalized
+sparse matrix-vector product over a semiring:
+
+    y[v] = add_{u in N_in(v), u active} mul(x[u], w(u, v))
+
+where ``add`` is the combiner (min for shortest paths, OR for bitmaps, max
+for label propagation) and ``mul`` injects the edge (``+w`` for distances,
+identity for flags).  This module defines the semiring vocabulary used by
+the engine, the Pallas kernels and the jnp reference implementations alike.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+
+# Sentinel "infinity" for integer distance lanes.  We use a large finite
+# value rather than the dtype max so that ``x + 1`` never wraps around.
+INF = np.int32(2**30)
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    """A (add, mul) pair with identities, driving frontier propagation.
+
+    add      : combines messages arriving at one vertex (associative,
+               commutative) -- the Pregel combiner.
+    add_id   : identity of ``add`` (value of "no message").
+    mul      : combines a source vertex value with an edge weight to form
+               the message.
+    name     : stable key used to select the matching Pallas kernel.
+    """
+
+    name: str
+    add: Callable[[Array, Array], Array]
+    add_id: object
+    mul: Callable[[Array, Array], Array]
+
+    def segment_combine(self, msgs: Array, dst: Array, num_segments: int) -> Array:
+        """Edge-parallel combine: reduce ``msgs`` by destination vertex."""
+        import jax
+
+        if self.name in ("min_plus", "min_right"):
+            return jax.ops.segment_min(msgs, dst, num_segments=num_segments)
+        if self.name in ("max_right", "max_plus"):
+            return jax.ops.segment_max(msgs, dst, num_segments=num_segments)
+        if self.name == "sum_times":
+            return jax.ops.segment_sum(msgs, dst, num_segments=num_segments)
+        raise ValueError(f"unknown semiring {self.name}")
+
+
+# Distances: message = d(u) + w(u,v); combine = min.  BFS uses w = 1.
+MIN_PLUS = Semiring("min_plus", jnp.minimum, INF, lambda x, w: x + w)
+
+# Label propagation taking the neighbour's value verbatim, combine = min/max.
+MIN_RIGHT = Semiring("min_right", jnp.minimum, INF, lambda x, w: x)
+MAX_RIGHT = Semiring("max_right", jnp.maximum, np.int32(-(2**30)), lambda x, w: x)
+
+# Longest path / level labels: message = l(u) + 1, combine = max.
+MAX_PLUS = Semiring("max_plus", jnp.maximum, np.int32(-(2**30)), lambda x, w: x + w)
+
+# Counting / PageRank-style numeric flows.
+SUM_TIMES = Semiring("sum_times", jnp.add, np.float32(0.0), lambda x, w: x * w)
+
+# NOTE on bitmaps (keyword search, SLCA/ELCA): propagated as per-bit 0/1
+# int lanes under MAX_RIGHT — TPU-friendly VPU lanes, and no scatter-OR
+# primitive is needed.  A packed-uint32 "or_and" semiring was removed: a
+# segment reduction for bitwise OR has no native lowering and emulating it
+# with segment_max is wrong for multi-bit masks.
+
+BY_NAME = {s.name: s for s in (MIN_PLUS, MIN_RIGHT, MAX_RIGHT, MAX_PLUS, SUM_TIMES)}

@@ -1,0 +1,44 @@
+"""jit'd dispatch layer for frontier propagation.
+
+``propagate`` picks the execution path:
+  * ``coo``    — segment-reduction reference (exact; the CPU-fast path the
+                 engine uses in this container),
+  * ``blocks`` — the Pallas block-sparse kernel (TPU target; interpret-mode
+                 on CPU for validation).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.graph import BlockSparse, Graph
+from repro.core.semiring import Semiring
+from repro.kernels import frontier, ref
+
+
+def propagate(
+    graph: Graph,
+    sr: Semiring,
+    x: jnp.ndarray,
+    frontier_mask: Optional[jnp.ndarray] = None,
+    *,
+    blocks: Optional[BlockSparse] = None,
+    backend: str = "coo",
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """One superstep of combined message propagation. x: (..., V)."""
+    if backend == "coo" or blocks is None:
+        return ref.propagate_coo(graph, sr, x, frontier_mask)
+    add_id = jnp.asarray(sr.add_id, x.dtype)
+    if frontier_mask is not None:
+        x = jnp.where(frontier_mask, x, add_id)
+    lead = x.shape[:-1]
+    flat = x.reshape((-1, x.shape[-1]))
+    if backend == "blocks_ref":
+        out = ref.propagate_blocks_ref(blocks, sr, flat)
+    elif backend == "pallas":
+        out = frontier.propagate_blocks(blocks, sr, flat, interpret=interpret)
+    else:
+        raise ValueError(backend)
+    return out.reshape(lead + (x.shape[-1],))

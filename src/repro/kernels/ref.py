@@ -1,0 +1,110 @@
+"""Pure-jnp oracles for the frontier-propagation kernels.
+
+``propagate_coo`` is the reference semantics of one Pregel superstep with a
+combiner (see core/semiring.py): edge-parallel message generation followed
+by a segment reduction keyed by destination.  The Pallas kernel in
+``frontier.py`` must match this bit-exactly on integer semirings and to
+float tolerance on float ones.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import BlockSparse, Graph
+from repro.core.semiring import INF, Semiring
+
+
+def _saturating_add(x, w, big):
+    """min-plus add that never wraps around on int32."""
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        return jnp.where((x >= big) | (w >= big), big, x + w)
+    return x + w
+
+
+def apply_mul(sr: Semiring, x, w):
+    big = jnp.asarray(INF, x.dtype) if sr.name in ("min_plus",) else None
+    if sr.name == "min_plus":
+        return _saturating_add(x, w.astype(x.dtype), big)
+    if sr.name == "max_plus":
+        if jnp.issubdtype(x.dtype, jnp.integer):
+            neg = jnp.asarray(-INF, x.dtype)
+            w_ = w.astype(x.dtype)
+            return jnp.where((x <= neg) | (w_ <= neg), neg, x + w_)
+        return x + w.astype(x.dtype)
+    if sr.name in ("min_right", "max_right"):
+        return x
+    if sr.name == "sum_times":
+        return x * w.astype(x.dtype)
+    raise ValueError(sr.name)
+
+
+def propagate_coo(graph: Graph, sr: Semiring, x: jnp.ndarray, frontier=None) -> jnp.ndarray:
+    """One superstep: x (..., V) -> combined incoming messages (..., V).
+
+    ``frontier`` (..., V) bool masks which sources emit; a masked source
+    contributes the add-identity.  Leading axes are query/lane batch dims.
+    """
+    add_id = jnp.asarray(sr.add_id, x.dtype)
+    if frontier is not None:
+        x = jnp.where(frontier, x, add_id)
+
+    def one(xv):
+        msgs = apply_mul(sr, xv[graph.src], graph.w)
+        out = sr.segment_combine(msgs, graph.dst, graph.n)
+        # segment reductions fill empty segments with the dtype extreme;
+        # clamp back to the semiring identity (our finite INF sentinel).
+        if sr.name in ("min_plus", "min_right"):
+            return jnp.minimum(out, add_id)
+        if sr.name in ("max_plus", "max_right"):
+            return jnp.maximum(out, add_id)
+        return out
+
+    flat = x.reshape((-1, x.shape[-1]))
+    out = jax.vmap(one)(flat)
+    return out.reshape(x.shape)
+
+
+def propagate_blocks_ref(bs: BlockSparse, sr: Semiring, x: jnp.ndarray) -> jnp.ndarray:
+    """jnp oracle operating on the *block-sparse* layout (same math the
+    Pallas kernel performs), for layout-level validation."""
+    q = x.shape[0]
+    b = bs.block
+    nb = bs.num_dst_blocks
+    add_id = jnp.asarray(sr.add_id, x.dtype)
+    xpad = x
+    if x.shape[-1] < nb * b:
+        xpad = jnp.pad(x, ((0, 0), (0, nb * b - x.shape[-1])), constant_values=sr.add_id)
+    xb = xpad.reshape(q, nb, b)
+
+    def dst_block(i):
+        def slot(k, acc):
+            xs = xb[:, bs.src_ids[i, k]]  # (q, b)
+            t = bs.tiles[i, k]  # (b, b)
+            if sr.name in ("min_plus", "max_plus"):
+                s = xs[:, :, None] + t[None].astype(x.dtype)
+                if jnp.issubdtype(x.dtype, jnp.integer):
+                    if sr.name == "min_plus":
+                        big = jnp.asarray(INF, x.dtype)
+                        s = jnp.where((xs[:, :, None] >= big) | (t[None] >= big), add_id, s)
+                    else:
+                        neg = jnp.asarray(-INF, x.dtype)
+                        s = jnp.where((xs[:, :, None] <= neg) | (t[None] <= neg), add_id, s)
+                part = jnp.min(s, 1) if sr.name == "min_plus" else jnp.max(s, 1)
+            elif sr.name in ("min_right", "max_right"):
+                present = t != sr.add_id
+                masked = jnp.where(present[None], xs[:, :, None], add_id)
+                part = jnp.min(masked, 1) if sr.name == "min_right" else jnp.max(masked, 1)
+            elif sr.name == "sum_times":
+                part = xs @ t.astype(x.dtype)
+            else:
+                raise ValueError(sr.name)
+            return sr.add(acc, part)
+
+        init = jnp.full((q, b), add_id, x.dtype)
+        return jax.lax.fori_loop(
+            0, bs.max_bpr, lambda k, a: slot(k, a), init
+        )
+
+    out = jax.vmap(dst_block)(jnp.arange(nb))  # (nb, q, b)
+    return out.transpose(1, 0, 2).reshape(q, nb * b)[:, : x.shape[-1]]

@@ -1,0 +1,74 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Re-lower the cells affected by the §Perf optimizations (D1 blocked MoE
+dispatch, G1 flash-decode, G2 stacked-cache sharding) into runs/dryrun_opt
+— the 'optimized' column next to the baseline table in EXPERIMENTS.md.
+
+Usage: PYTHONPATH=src python -m repro.launch.rerun_opt [--mp] [--out runs/dryrun_opt]
+"""
+import argparse
+import json
+import traceback
+
+from repro.launch.dryrun import lower_cell
+
+MOE = ["arctic-480b", "deepseek-v2-236b"]
+ALL = ["arctic-480b", "deepseek-v2-236b", "gemma2-9b", "glm4-9b",
+       "llava-next-34b", "mamba2-780m", "recurrentgemma-2b",
+       "starcoder2-15b", "tinyllama-1.1b", "whisper-base"]
+SUBQ = ["mamba2-780m", "recurrentgemma-2b"]
+
+
+DENSE_BIG = ["gemma2-9b", "glm4-9b", "llava-next-34b", "starcoder2-15b",
+             "recurrentgemma-2b"]  # FSDP->ZeRO-1 policy change (L1)
+
+
+def cells():
+    out = []
+    for a in MOE:  # D1 blocked dispatch
+        for s in ("train_4k", "prefill_32k"):
+            out.append((a, s))
+    for a in DENSE_BIG:  # L1 ZeRO-1 moments / TP-only params
+        for s in ("train_4k", "prefill_32k"):
+            out.append((a, s))
+    for a in ("tinyllama-1.1b", "whisper-base", "mamba2-780m"):
+        # pure-DP models: ZeRO-1 moments + batch-prefix shard() fix
+        out.append((a, "train_4k"))
+        out.append((a, "prefill_32k"))
+    for a in ALL:  # G1 flash-decode + G2 cache sharding
+        out.append((a, "decode_32k"))
+    for a in SUBQ:
+        out.append((a, "long_500k"))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mp", action="store_true", help="also run the multi-pod mesh")
+    ap.add_argument("--out", default="runs/dryrun_opt")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    meshes = [False, True] if args.mp else [False]
+    failures = 0
+    for arch, shape in cells():
+        for mp in meshes:
+            tag = f"{arch}_{shape}_{'mp' if mp else 'sp'}"
+            print(f"[rerun_opt] {tag}", flush=True)
+            try:
+                res = lower_cell(arch, shape, multi_pod=mp)
+            except Exception as e:
+                traceback.print_exc()
+                res = dict(arch=arch, shape=shape, mesh=mp, status="FAILED",
+                           error=f"{type(e).__name__}: {e}")
+                failures += 1
+            with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                json.dump(res, f, indent=2, default=str)
+            print(f"  -> {res['status']}", flush=True)
+    print(f"[rerun_opt] done, {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,267 @@
+"""Shared model components: norms, RoPE, sharding helpers, init."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+# ------------------------------------------------------------- sharding
+# Logical-axis rules (MaxText-style).  Model code annotates tensors with
+# logical names; the launcher binds them to mesh axes.  With no mesh
+# registered (unit tests, single CPU) the constraints are no-ops.
+_MESH = None
+_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,  # full activations keep seq replicated
+    "seq_shard": "model",  # sequence-parallel residual boundaries
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "ffn": "model",
+    "vocab": "model",
+    "experts": "model",
+    "fsdp": "data",  # parameter second-axis sharding (ZeRO-ish)
+    "none": None,
+}
+
+
+_TP_ENABLED = True
+
+
+def set_mesh(mesh, rules: Optional[dict] = None):
+    global _MESH, _RULES
+    _MESH = mesh
+    if rules:
+        _RULES = {**_RULES, **rules}
+
+
+_FSDP_PARAMS = True
+
+
+def set_fsdp(enabled: bool):
+    """Parameter-FSDP switch (ZeRO-3 vs ZeRO-1).  When the TP-sharded
+    parameters fit per-device HBM comfortably, FSDP-sharding them only
+    buys per-microbatch all-gathers (llava-34b train: 4.7e12 collective
+    bytes/device/step).  Disabled → params are TP-only; optimizer moments
+    stay data-sharded (``param_spec(force_fsdp=True)``), which makes
+    GSPMD reduce-scatter gradients and all-gather the update — ZeRO-1."""
+    global _FSDP_PARAMS
+    _FSDP_PARAMS = enabled
+
+
+def set_tp(enabled: bool):
+    """Tensor-parallelism switch.  Small models (< ~1.5B params) replicate
+    their weights and run pure DP: TP-sharding an 80M-param whisper over a
+    16-way 'model' axis costs per-layer activation all-reduces worth far
+    more than the replicated-weight memory.  The launcher picks this per
+    architecture (see dryrun.lower_cell)."""
+    global _TP_ENABLED
+    _TP_ENABLED = enabled
+
+
+def get_mesh():
+    return _MESH
+
+
+def logical_spec(*names: Optional[str]) -> P:
+    axes = []
+    for nm in names:
+        if nm is None:
+            axes.append(None)
+            continue
+        ax = _RULES.get(nm, None)
+        if not _TP_ENABLED:
+            if nm == "batch":
+                # pure DP: the whole mesh is one data axis
+                ax = ("pod", "data", "model")
+            elif ax == "model" or (isinstance(ax, tuple) and "model" in ax):
+                ax = None
+        if isinstance(ax, tuple):
+            ax = tuple(a for a in ax if _MESH is not None and a in _MESH.axis_names)
+            ax = ax if ax else None
+        elif ax is not None and _MESH is not None and ax not in _MESH.axis_names:
+            ax = None
+        axes.append(ax)
+    return P(*axes)
+
+
+def shard(x, *names: Optional[str]):
+    """with_sharding_constraint by logical axis names; no-op without mesh.
+
+    Axes whose mesh extent does not divide the tensor dim are dropped —
+    constraining e.g. 8 heads onto a 16-way 'model' axis makes GSPMD
+    split neighbouring dims ([1,1,8,2] shardings) and insert involuntary
+    full rematerializations (replicate-then-repartition all-gathers)."""
+    if _MESH is None:
+        return x
+    from jax.sharding import NamedSharding
+
+    spec = logical_spec(*names)
+    fixed = []
+    for dim, ax in enumerate(spec):
+        if dim >= x.ndim:
+            break  # surplus names (e.g. a 2-D call site of a 3-D helper)
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = list((ax,) if isinstance(ax, str) else ax)
+        # degrade tuple axes to the longest divisible PREFIX — dropping the
+        # constraint entirely replicates the tensor (a B=32 batch on a
+        # ('data','model')=256 product must still shard 16-way over 'data')
+        while axes:
+            n = 1
+            for a in axes:
+                n *= _MESH.shape[a]
+            if n and x.shape[dim] % n == 0:
+                break
+            axes.pop()
+        fixed.append(tuple(axes) if axes else None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, P(*fixed)))
+
+
+def divides_model(n: int) -> bool:
+    """True when ``n`` splits evenly over the TP axis (or there is none)."""
+    if _MESH is None or not _TP_ENABLED or "model" not in _MESH.axis_names:
+        return True
+    return n % _MESH.shape["model"] == 0
+
+
+def batch_shards() -> int:
+    """Number of shards of the logical 'batch' axis on the current mesh —
+    the block count for shard-local MoE dispatch (mlp.moe)."""
+    if _MESH is None:
+        return 1
+    spec = logical_spec("batch")
+    ax = spec[0] if spec else None
+    if ax is None:
+        return 1
+    n = 1
+    for a in (ax,) if isinstance(ax, str) else ax:
+        n *= _MESH.shape[a]
+    return n
+
+
+def param_sharding(path: str, shape: Sequence[int]):
+    """NamedSharding for a parameter by naming convention (see init docs)."""
+    if _MESH is None:
+        return None
+    from jax.sharding import NamedSharding
+
+    return NamedSharding(_MESH, param_spec(path, shape))
+
+
+def _axis_size(name: str) -> int:
+    if _MESH is None or name not in _MESH.axis_names:
+        return 1
+    return _MESH.shape[name]
+
+
+def param_spec(path: str, shape: Sequence[int], *, force_fsdp: bool = False) -> P:
+    """TP ('model') on the parallel dim + FSDP ('data') on another dim.
+
+    Naming convention in param paths:
+      *_colp : column-parallel (last dim sharded over model)  e.g. wq, w_up
+      *_rowp : row-parallel (first matmul dim sharded)        e.g. wo, w_down
+      *_embed: vocab dim sharded over model
+      *_exp  : experts dim sharded over model (EP)
+      *_rep  : replicated
+
+    Dims that don't divide the mesh axis fall back to the next candidate
+    dim or stay replicated.
+    """
+    nd = len(shape)
+    if not _TP_ENABLED:
+        if force_fsdp:  # ZeRO-1 moments of a pure-DP model
+            dsz = _axis_size("data")
+            if dsz > 1 and nd:
+                s, i = max((s, i) for i, s in enumerate(shape))
+                if s % dsz == 0 and s >= 1024:
+                    axes = [None] * nd
+                    axes[i] = "data"
+                    return P(*axes)
+        return P(*([None] * nd))  # pure DP: replicate weights
+    msz = _axis_size("model")
+    candidates: list[int] = []
+    if path.endswith("_colp"):
+        candidates = [nd - 1, max(nd - 2, 0)]
+    elif path.endswith("_rowp"):
+        candidates = [max(nd - 2, 0), nd - 1]
+    elif path.endswith("_embed"):
+        # vocab-dim only: sharding the d_model dim of an embedding turns the
+        # token gather into a dim-1-sharded dynamic-slice, which XLA's SPMD
+        # partitioner mis-lowers inside scan+jvp (hlo-verifier failure).
+        # Odd vocab sizes simply replicate the (small) table.
+        candidates = [0] if nd == 2 else []
+    elif path.endswith("_exp"):
+        candidates = ([1, nd - 1] if nd >= 4 else [0, nd - 1]) if nd >= 3 else []
+    model_dim = None
+    for c in candidates:
+        if shape[c] % msz == 0 and shape[c] >= msz:
+            model_dim = c
+            break
+    axes: list = [None] * nd
+    if model_dim is not None:
+        axes[model_dim] = "model"
+        # FSDP over 'data' on the largest remaining dim if divisible
+        # (always applied to optimizer moments via force_fsdp = ZeRO-1)
+        if force_fsdp or _FSDP_PARAMS:
+            dsz = _axis_size("data")
+            rest = [(s, i) for i, s in enumerate(shape) if i != model_dim]
+            if rest:
+                s, i = max(rest)
+                if dsz > 1 and s % dsz == 0 and s >= 1024:
+                    axes[i] = "data"
+    return P(*axes)
+
+
+# ----------------------------------------------------------------- layers
+def rms_norm(x, scale, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """RoPE computed on the fly (no table — 500k-position-safe).
+
+    x: (B, S, H, Dh); positions: (S,) or (B, S) int32."""
+    dh = x.shape[-1]
+    inv = 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+    pos = positions.astype(jnp.float32)
+    if pos.ndim == 1:
+        pos = pos[None]  # (1, S)
+    f = pos[:, :, None] * inv[None, None, :]  # (B|1, S, Dh/2)
+    c = jnp.cos(f)[:, :, None, :]
+    s = jnp.sin(f)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embed(positions, d_model: int):
+    """Whisper-style sinusoidal position embeddings. positions: (S,) or (B,S)."""
+    half = d_model // 2
+    freqs = jnp.exp(-np.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    pos = positions.astype(jnp.float32)[..., None]
+    ang = pos * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def dense_init(key, shape, in_axis: int = -2, dtype=jnp.bfloat16):
+    fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))

@@ -1,0 +1,119 @@
+"""Feed-forward layers: SwiGLU MLP and sort-based capacity MoE.
+
+MoE dispatch is the sort-based capacity scheme (no (T, E, C) one-hot):
+token->expert assignments are sorted by expert id, ranked within expert,
+dropped beyond capacity, and scattered into an (E, C, D) buffer.  Expert
+compute is then two dense (E-local) einsums — MXU-shaped — and results
+scatter back weighted by the router probabilities.  Tokens overflowing
+capacity fall through on the residual stream (standard drop behavior).
+
+SPMD-critical detail (§Perf iteration D1): dispatch is performed per
+*token block*, with the block axis aligned to the data sharding.  A
+global argsort/scatter over the full (T·K) axis forces GSPMD to
+replicate 100+ GB dispatch tensors and all-reduce them (measured on
+deepseek-v2: 1.18 TB collective bytes per layer-pair).  Blocked dispatch
+keeps router/sort/rank/scatter shard-local; only the (blocks, E, C, D)
+buffer crosses the mesh to meet the expert-sharded weights — the GShard
+all-to-all pattern, expressed through sharding constraints.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import dense_init, shard, split_keys
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = split_keys(key, 3)
+    return dict(
+        w_gate_colp=dense_init(k1, (d_model, d_ff), dtype=dtype),
+        w_up_colp=dense_init(k2, (d_model, d_ff), dtype=dtype),
+        w_down_rowp=dense_init(k3, (d_ff, d_model), dtype=dtype),
+    )
+
+
+def mlp(params, x):
+    h = jax.nn.silu(x @ params["w_gate_colp"]) * (x @ params["w_up_colp"])
+    h = shard(h, "batch", "seq", "ffn")
+    return h @ params["w_down_rowp"]
+
+
+def init_moe(key, cfg: ArchConfig, dtype):
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.expert_d_ff
+    ks = split_keys(key, 5)
+    p = dict(
+        w_router_rep=dense_init(ks[0], (d, e), dtype=jnp.float32),
+        w_gate_exp=dense_init(ks[1], (e, d, f), dtype=dtype),
+        w_up_exp=dense_init(ks[2], (e, d, f), dtype=dtype),
+        w_down_exp=dense_init(ks[3], (e, f, d), dtype=dtype),
+    )
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, f * cfg.n_shared_experts, dtype)
+    return p
+
+
+def moe(params, x2d: jnp.ndarray, cfg: ArchConfig, n_blocks: int = 1):
+    """x2d: (T, D) flat tokens -> (T, D).  Aux-free top-k routing.
+
+    ``n_blocks`` must align with (divide evenly into) the data sharding of
+    the token axis; dispatch is local per block (see module docstring).
+    Capacity is per (block, expert): C = ceil(T_b·K/E · factor).
+    """
+    T, D = x2d.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    if n_blocks <= 0 or T % n_blocks:
+        n_blocks = 1
+    Tb = T // n_blocks
+    cap = max(1, int(math.ceil(Tb * K / E * cfg.capacity_factor)))
+
+    xb = shard(x2d.reshape(n_blocks, Tb, D), "batch", None, None)
+    logits = xb.astype(jnp.float32) @ params["w_router_rep"]  # (nb, Tb, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, K)  # (nb, Tb, K)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    def dispatch(topi_b, topw_b):
+        """Per-block routing plan — pure shard-local index math."""
+        eid = topi_b.reshape(-1)  # (Tb*K,)
+        wgt = topw_b.reshape(-1)
+        tok = jnp.repeat(jnp.arange(Tb, dtype=jnp.int32), K)
+        order = jnp.argsort(eid)
+        eid_s, tok_s, wgt_s = eid[order], tok[order], wgt[order]
+        seg_start = jnp.searchsorted(eid_s, eid_s, side="left")
+        rank = jnp.arange(Tb * K, dtype=jnp.int32) - seg_start
+        keep = rank < cap
+        slot_e = jnp.where(keep, eid_s, E - 1)
+        slot_c = jnp.where(keep, rank, cap - 1)
+        return tok_s, wgt_s, keep, slot_e, slot_c
+
+    tok_s, wgt_s, keep, slot_e, slot_c = jax.vmap(dispatch)(topi, topw)
+
+    def fill(xb_b, tok_s_b, keep_b, slot_e_b, slot_c_b):
+        vals = jnp.where(keep_b[:, None], xb_b[tok_s_b], 0)
+        return jnp.zeros((E, cap, D), x2d.dtype).at[slot_e_b, slot_c_b].add(vals)
+
+    buf = jax.vmap(fill)(xb, tok_s, keep, slot_e, slot_c)  # (nb, E, cap, D)
+    # the one mesh crossing: block-sharded tokens meet expert-sharded
+    # weights (GSPMD lowers the resharding to an all-to-all)
+    buf = shard(buf, "batch", "experts", None, None)
+
+    h = jnp.einsum("becd,edf->becf", buf, params["w_gate_exp"])
+    u = jnp.einsum("becd,edf->becf", buf, params["w_up_exp"])
+    h = jax.nn.silu(h) * u
+    h = shard(h, "batch", "experts", None, None)
+    out_buf = jnp.einsum("becf,efd->becd", h, params["w_down_exp"])
+    out_buf = shard(out_buf, "batch", None, None, None)
+
+    def collect(out_b, tok_s_b, wgt_s_b, keep_b, slot_e_b, slot_c_b):
+        g = out_b[slot_e_b, slot_c_b] * jnp.where(keep_b, wgt_s_b, 0.0)[:, None].astype(x2d.dtype)
+        return jnp.zeros((Tb, D), x2d.dtype).at[tok_s_b].add(g)
+
+    y = jax.vmap(collect)(out_buf, tok_s, wgt_s, keep, slot_e, slot_c)
+    y = shard(y, "batch", None, None).reshape(T, D)
+    if "shared" in params:
+        y = y + mlp(params["shared"], x2d)
+    return y

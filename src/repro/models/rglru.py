@@ -1,0 +1,68 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t^2) ⊙ (i_t ⊙ x_t)
+a_t = exp(-c · softplus(Λ) · r_t),  r/i = input-dependent sigmoid gates.
+
+Training uses an associative scan over the sequence; decode is the
+single-step recurrence.  The surrounding block is Griffin's gated unit:
+out = W_out( GeLU(W_a x) ⊙ RGLRU(conv1d(W_b x)) ).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import dense_init, split_keys
+from repro.models.ssm import _causal_conv
+
+C_FACTOR = 8.0
+
+
+def init_rglru(key, cfg: ArchConfig, dtype):
+    d = cfg.d_model
+    w = cfg.rglru_width or d
+    ks = split_keys(key, 6)
+    return dict(
+        w_gate_colp=dense_init(ks[0], (d, w), dtype=dtype),
+        w_branch_colp=dense_init(ks[1], (d, w), dtype=dtype),
+        conv_rep=dense_init(ks[2], (cfg.conv_kernel, w), dtype=dtype),
+        w_r_rep=dense_init(ks[3], (w, w), dtype=dtype),
+        w_i_rep=dense_init(ks[4], (w, w), dtype=dtype),
+        lam_rep=jnp.full((w,), 0.5, jnp.float32),
+        w_out_rowp=dense_init(ks[5], (w, d), dtype=dtype),
+    )
+
+
+def _rglru_scan(x, r, i, lam):
+    """x, r, i: (B, S, W) float32.  Returns (y, final_h)."""
+    log_a = -C_FACTOR * jax.nn.softplus(lam)[None, None, :] * r  # (B,S,W) <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    A, Bv = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return Bv, Bv[:, -1]
+
+
+def rglru_block(params, x, cfg: ArchConfig, h_state=None, conv_state=None):
+    """x: (B, S, D).  Decode when S == 1 with carried states."""
+    gate = jax.nn.gelu(x @ params["w_gate_colp"])
+    b = x @ params["w_branch_colp"]
+    b, new_conv = _causal_conv(b, params["conv_rep"], conv_state)
+    bf = b.astype(jnp.float32)
+    r = jax.nn.sigmoid(bf @ params["w_r_rep"].astype(jnp.float32))
+    i = jax.nn.sigmoid(bf @ params["w_i_rep"].astype(jnp.float32))
+    if x.shape[1] > 1:
+        y, new_h = _rglru_scan(bf, r, i, params["lam_rep"])
+    else:
+        log_a = -C_FACTOR * jax.nn.softplus(params["lam_rep"])[None, None, :] * r
+        a = jnp.exp(log_a)
+        y = a * h_state[:, None] + jnp.sqrt(jnp.maximum(1 - a * a, 1e-12)) * (i * bf)
+        new_h = y[:, 0]
+    out = (gate * y.astype(x.dtype)) @ params["w_out_rowp"]
+    return out, new_h, new_conv

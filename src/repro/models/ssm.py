@@ -1,0 +1,145 @@
+"""Mamba2 SSD (state-space duality) block — arXiv:2405.21060.
+
+Chunked SSD: the sequence is split into chunks; within a chunk the dual
+quadratic (attention-like) form runs on the MXU, and chunk-final states
+are passed through a sequential scan (carried state (H, P, N) per batch).
+Decode is the pure recurrence h = dA * h + dt * B ⊗ x.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import dense_init, rms_norm, split_keys
+
+
+def _segsum(x):
+    """(..., L) -> (..., L, L) lower-triangular inclusive segment sums."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def init_ssm(key, cfg: ArchConfig, dtype):
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    nh = din // cfg.ssm_head_dim
+    n = cfg.ssm_state
+    ks = split_keys(key, 4)
+    return dict(
+        w_in_colp=dense_init(ks[0], (d, 2 * din + 2 * n + nh), dtype=dtype),
+        conv_rep=dense_init(ks[1], (cfg.conv_kernel, din + 2 * n), dtype=dtype),
+        a_log_rep=jnp.zeros((nh,), jnp.float32),
+        d_skip_rep=jnp.ones((nh,), jnp.float32),
+        dt_bias_rep=jnp.zeros((nh,), jnp.float32),
+        norm_rep=jnp.zeros((din,), jnp.float32),
+        w_out_rowp=dense_init(ks[2], (din, d), dtype=dtype),
+    )
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv1d. x: (B, S, C), w: (K, C).
+    Returns (y, new_state) where state is the last K-1 inputs."""
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state, x], axis=1)
+    ys = sum(xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(K))
+    return jax.nn.silu(ys), xp[:, -(K - 1) :]
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """SSD over chunks.  x: (b, s, h, p); dt: (b, s, h); A: (h,);
+    B, C: (b, s, n).  Returns (y, final_state (b, h, p, n))."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+    dA = dtc * (-jnp.exp(A))[None, None, None, :]  # (b,nc,l,h) negative
+
+    # intra-chunk (dual quadratic form)
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))  # (b,nc,h,l,l)
+    scores = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)  # (b,nc,l,l)
+    M = scores[:, :, None] * L  # (b,nc,h,l,l)
+    y_diag = jnp.einsum("bchlm,bcmh,bcmhp->bclhp", M, dtc, xc)
+
+    # chunk-final states
+    dA_cum = jnp.cumsum(dA, axis=2)  # (b,nc,l,h)
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # (b,nc,l,h)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", Bc, dtc * decay_to_end, xc)
+
+    # inter-chunk recurrence over chunk boundaries
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])  # (b,nc,h)
+
+    def scan_fn(carry, inp):
+        st, dec = inp  # (b,h,p,n), (b,h)
+        new = carry * dec[:, :, None, None] + st
+        return new, carry  # emit state *entering* this chunk
+
+    init = jnp.zeros((b, h, p, n), x.dtype)
+    final, entering = jax.lax.scan(
+        scan_fn,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    entering = entering.transpose(1, 0, 2, 3, 4)  # (b,nc,h,p,n)
+
+    # contribution of entering state to each position
+    in_decay = jnp.exp(dA_cum)  # (b,nc,l,h)
+    y_off = jnp.einsum("bcln,bclh,bchpn->bclhp", Cc, in_decay, entering)
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final
+
+
+def ssm_block(params, x, cfg: ArchConfig, state=None, conv_state=None):
+    """Full Mamba2 block.  Train: state=None -> chunked SSD.
+    Decode: x (B,1,D) with carried (state, conv_state)."""
+    b, s, d = x.shape
+    din = cfg.ssm_expand * d
+    nh = din // cfg.ssm_head_dim
+    n = cfg.ssm_state
+    zxbcdt = x @ params["w_in_colp"]
+    z, xs, B, C, dt = jnp.split(
+        zxbcdt, [din, 2 * din, 2 * din + n, 2 * din + 2 * n], axis=-1
+    )
+    conv_in = jnp.concatenate([xs, B, C], axis=-1)
+    conv_out, new_conv = _causal_conv(conv_in, params["conv_rep"], conv_state)
+    xs, B, C = jnp.split(conv_out, [din, din + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias_rep"])  # (b,s,nh)
+    xh = xs.reshape(b, s, nh, cfg.ssm_head_dim)
+    A = params["a_log_rep"]
+
+    if s > 1:
+        pad = (-s) % cfg.ssm_chunk
+        if pad:
+            xh2 = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt2 = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            B2 = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+            C2 = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        else:
+            xh2, dt2, B2, C2 = xh, dt, B, C
+        y, new_state = ssd_chunked(
+            xh2.astype(jnp.float32), dt2, A, B2.astype(jnp.float32),
+            C2.astype(jnp.float32), cfg.ssm_chunk
+        )
+        y = y[:, :s]
+    else:  # decode recurrence
+        dA = jnp.exp(dt[:, 0] * (-jnp.exp(A))[None, :])  # (b,nh)
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0], B[:, 0].astype(jnp.float32),
+                         xh[:, 0].astype(jnp.float32))
+        new_state = state * dA[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", C[:, 0].astype(jnp.float32), new_state)[:, None]
+
+    y = y + xh.astype(jnp.float32) * params["d_skip_rep"][None, None, :, None]
+    y = y.reshape(b, s, din)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), params["norm_rep"])
+    out = y.astype(x.dtype) @ params["w_out_rowp"]
+    return out, new_state, new_conv

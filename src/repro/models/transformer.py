@@ -1,0 +1,463 @@
+"""Model assembly for all assigned architectures.
+
+Layers are grouped into *super-blocks* of ``len(block_pattern)`` layers so
+that heterogeneous patterns (gemma2 local/global, recurrentgemma
+rec/rec/attn) scan with static per-position layer kinds: parameters are
+stacked per pattern position, ``lax.scan`` runs over super-blocks, and any
+remainder layers are unrolled.  This keeps the compiled HLO compact (one
+scan body regardless of depth) while every branch inside the body is
+static — no traced conds.
+
+Modes:
+  forward(params, cfg, batch)             -> logits over token positions
+  loss_fn(params, cfg, batch)             -> scalar CE loss (train_step)
+  init_cache(cfg, B, max_len)             -> decode cache pytree
+  serve_step(params, cfg, cache, tokens, pos) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_lib
+from repro.models import mlp as mlp_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssm as ssm_lib
+from repro.models.common import (
+    apply_rope,
+    dense_init,
+    rms_norm,
+    shard,
+    sinusoidal_embed,
+    softcap,
+    split_keys,
+)
+
+
+# ---------------------------------------------------------------- pattern
+def layer_pattern(cfg: ArchConfig) -> list[str]:
+    if cfg.family == "ssm":
+        return ["ssm"] * cfg.n_layers
+    if cfg.block_pattern:
+        return [cfg.block_pattern[i % len(cfg.block_pattern)] for i in range(cfg.n_layers)]
+    return [cfg.attn_pattern[i % len(cfg.attn_pattern)] for i in range(cfg.n_layers)]
+
+
+def _plen(cfg: ArchConfig) -> int:
+    if cfg.family == "ssm":
+        return 1
+    if cfg.block_pattern:
+        return len(cfg.block_pattern)
+    return len(cfg.attn_pattern)
+
+
+# ------------------------------------------------------------- init layers
+def init_attn_layer(key, cfg: ArchConfig, dtype, cross: bool = False):
+    d, hd = cfg.d_model, cfg.hd
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    ks = split_keys(key, 10)
+    if cfg.use_mla:
+        p = dict(
+            ln1_rep=jnp.zeros((d,), jnp.float32),
+            wq_a_rep=dense_init(ks[0], (d, cfg.q_lora_rank), dtype=dtype),
+            wq_b_colp=dense_init(ks[1], (cfg.q_lora_rank, H * (cfg.nope_head_dim + cfg.rope_head_dim)), dtype=dtype),
+            wkv_a_rep=dense_init(ks[2], (d, cfg.kv_lora_rank + cfg.rope_head_dim), dtype=dtype),
+            wkv_b_colp=dense_init(ks[3], (cfg.kv_lora_rank, H * 2 * cfg.nope_head_dim), dtype=dtype),
+            wo_rowp=dense_init(ks[4], (H * cfg.nope_head_dim, d), dtype=dtype),
+        )
+    else:
+        p = dict(
+            ln1_rep=jnp.zeros((d,), jnp.float32),
+            wq_colp=dense_init(ks[0], (d, H * hd), dtype=dtype),
+            wk_colp=dense_init(ks[1], (d, KV * hd), dtype=dtype),
+            wv_colp=dense_init(ks[2], (d, KV * hd), dtype=dtype),
+            wo_rowp=dense_init(ks[3], (H * hd, d), dtype=dtype),
+        )
+    if cross:
+        p.update(
+            ln_x_rep=jnp.zeros((d,), jnp.float32),
+            xq_colp=dense_init(ks[5], (d, H * hd), dtype=dtype),
+            xk_colp=dense_init(ks[6], (d, KV * hd), dtype=dtype),
+            xv_colp=dense_init(ks[7], (d, KV * hd), dtype=dtype),
+            xo_rowp=dense_init(ks[8], (H * hd, d), dtype=dtype),
+        )
+    p["ln2_rep"] = jnp.zeros((d,), jnp.float32)
+    if cfg.n_experts:
+        p["moe"] = mlp_lib.init_moe(ks[9], cfg, dtype)
+        if cfg.moe_dense_residual or cfg.d_ff:
+            p["mlp"] = mlp_lib.init_mlp(ks[4], cfg.d_model, cfg.d_ff, dtype)
+    else:
+        p["mlp"] = mlp_lib.init_mlp(ks[9], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_rec_layer(key, cfg: ArchConfig, dtype):
+    k1, k2 = split_keys(key, 2)
+    return dict(
+        ln1_rep=jnp.zeros((cfg.d_model,), jnp.float32),
+        rglru=rglru_lib.init_rglru(k1, cfg, dtype),
+        ln2_rep=jnp.zeros((cfg.d_model,), jnp.float32),
+        mlp=mlp_lib.init_mlp(k2, cfg.d_model, cfg.d_ff, dtype),
+    )
+
+
+def init_ssm_layer(key, cfg: ArchConfig, dtype):
+    return dict(
+        ln1_rep=jnp.zeros((cfg.d_model,), jnp.float32),
+        ssm=ssm_lib.init_ssm(key, cfg, dtype),
+    )
+
+
+def _init_one(kind: str, key, cfg: ArchConfig, dtype):
+    if kind == "ssm":
+        return init_ssm_layer(key, cfg, dtype)
+    if kind == "rec":
+        return init_rec_layer(key, cfg, dtype)
+    return init_attn_layer(key, cfg, dtype, cross=cfg.cross_attention)
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    pat = layer_pattern(cfg)
+    plen = _plen(cfg)
+    n_super, rem = divmod(cfg.n_layers, plen)
+    keys = split_keys(key, 8)
+    params: dict[str, Any] = dict(
+        embed_embed=dense_init(keys[0], (cfg.vocab_padded, cfg.d_model), in_axis=-1, dtype=dtype),
+        final_norm_rep=jnp.zeros((cfg.d_model,), jnp.float32),
+    )
+    if not cfg.tie_embeddings:
+        params["lm_head_colp"] = dense_init(keys[1], (cfg.d_model, cfg.vocab_padded), dtype=dtype)
+
+    if cfg.scan_layers and n_super > 1:
+        stacks = []
+        for pos in range(plen):
+            kind = pat[pos]
+            ks = split_keys(keys[2 + (pos % 4)], n_super)
+            stacked = jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[_init_one(kind, ks[i], cfg, dtype) for i in range(n_super)],
+            )
+            stacks.append(stacked)
+        params["blocks"] = stacks
+        params["rem_blocks"] = [
+            _init_one(pat[n_super * plen + i], split_keys(keys[6], max(rem, 1))[i], cfg, dtype)
+            for i in range(rem)
+        ]
+    else:
+        ks = split_keys(keys[2], cfg.n_layers)
+        params["blocks"] = []
+        params["rem_blocks"] = [_init_one(pat[i], ks[i], cfg, dtype) for i in range(cfg.n_layers)]
+
+    if cfg.encoder_layers:
+        ks = split_keys(keys[7], cfg.encoder_layers)
+        params["encoder"] = dict(
+            blocks=[init_attn_layer(ks[i], cfg, dtype, cross=False) for i in range(cfg.encoder_layers)],
+            final_norm_rep=jnp.zeros((cfg.d_model,), jnp.float32),
+        )
+    return params
+
+
+# --------------------------------------------------------------- caching
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None) -> dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    pat = layer_pattern(cfg)
+
+    def one(kind):
+        if kind == "ssm":
+            din = cfg.ssm_expand * cfg.d_model
+            nh = din // cfg.ssm_head_dim
+            return dict(
+                state=jnp.zeros((batch, nh, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+                conv=jnp.zeros((batch, cfg.conv_kernel - 1, din + 2 * cfg.ssm_state), dtype),
+            )
+        if kind == "rec":
+            w = cfg.rglru_width or cfg.d_model
+            return dict(
+                h=jnp.zeros((batch, w), jnp.float32),
+                conv=jnp.zeros((batch, cfg.conv_kernel - 1, w), dtype),
+            )
+        if cfg.use_mla:
+            return dict(
+                ckv=jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+                krope=jnp.zeros((batch, max_len, cfg.rope_head_dim), dtype),
+            )
+        length = min(max_len, cfg.local_window) if kind == "local" else max_len
+        return dict(
+            k=jnp.zeros((batch, length, cfg.n_kv_heads, cfg.hd), dtype),
+            v=jnp.zeros((batch, length, cfg.n_kv_heads, cfg.hd), dtype),
+        )
+
+    plen = _plen(cfg)
+    n_super, rem = divmod(cfg.n_layers, plen)
+    cache: dict[str, Any] = {}
+    if cfg.scan_layers and n_super > 1:
+        cache["blocks"] = [
+            jax.tree.map(lambda x: jnp.stack([x] * n_super), one(pat[p])) for p in range(plen)
+        ]
+        cache["rem_blocks"] = [one(pat[n_super * plen + i]) for i in range(rem)]
+    else:
+        cache["blocks"] = []
+        cache["rem_blocks"] = [one(pat[i]) for i in range(cfg.n_layers)]
+    if cfg.encoder_layers:
+        cache["enc_out"] = jnp.zeros((batch, cfg.encoder_seq, cfg.d_model), dtype)
+    return cache
+
+
+# ----------------------------------------------------------- layer apply
+def apply_attn_layer(p, x, cfg: ArchConfig, kind: str, positions, cache=None,
+                     pos=None, enc_out=None):
+    """x: (B, S, D).  Train/prefill when cache is None; else single-token
+    decode updating the cache at pos (B,)."""
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    window = cfg.local_window if kind == "local" else 0
+    h = rms_norm(x, p["ln1_rep"], cfg.norm_eps)
+
+    if cfg.use_mla:
+        dq = cfg.nope_head_dim + cfg.rope_head_dim
+        q = ((h @ p["wq_a_rep"]) @ p["wq_b_colp"]).reshape(B, S, H, dq)
+        q_nope, q_rope = jnp.split(q, [cfg.nope_head_dim], axis=-1)
+        kv_a = h @ p["wkv_a_rep"]  # (B,S,kv_lora+rope)
+        ckv, k_rope1 = jnp.split(kv_a, [cfg.kv_lora_rank], axis=-1)
+        if cache is not None:
+            bidx = jnp.arange(B)
+            cache = dict(
+                ckv=cache["ckv"].at[bidx, pos].set(ckv[:, 0]),
+                krope=cache["krope"].at[bidx, pos].set(k_rope1[:, 0]),
+            )
+            ckv_all, krope_all = cache["ckv"], cache["krope"]
+        else:
+            ckv_all, krope_all = ckv, k_rope1
+        Sk = ckv_all.shape[1]
+        kv = (ckv_all @ p["wkv_b_colp"]).reshape(B, Sk, H, 2 * cfg.nope_head_dim)
+        k_nope, v = jnp.split(kv, 2, axis=-1)
+        kpos = jnp.arange(Sk) if cache is not None else positions
+        k_rope = apply_rope(krope_all[:, :, None, :], kpos, cfg.rope_theta)
+        q_rope = apply_rope(q_rope, positions if cache is None else pos[:, None], cfg.rope_theta)
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, Sk, H, cfg.rope_head_dim))], -1)
+        q = jnp.concatenate([q_nope, q_rope], -1)
+        if cache is not None:
+            o = attn_lib.decode_attention(q, k, v, pos, local_window=window,
+                                          attn_softcap=cfg.attn_softcap)
+        else:
+            o = attn_lib.causal_attention(
+                q, k, v, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                local_window=window, attn_softcap=cfg.attn_softcap)
+        o = o.reshape(B, S, H * cfg.nope_head_dim) if False else o
+        attn_out = o.reshape(B, S, -1) @ p["wo_rowp"]
+    else:
+        from repro.models.common import divides_model
+
+        KV = cfg.n_kv_heads
+        kv_shard = not divides_model(H)  # 56 heads on a 16-way axis etc.
+        q = (h @ p["wq_colp"]).reshape(B, S, H, hd)
+        k = (h @ p["wk_colp"]).reshape(B, S, KV, hd)
+        v = (h @ p["wv_colp"]).reshape(B, S, KV, hd)
+        q = shard(q, "batch", "seq", "heads", None)
+        if cfg.rope:
+            rp = positions if cache is None else pos[:, None]
+            q = apply_rope(q, rp, cfg.rope_theta)
+            k = apply_rope(k, rp, cfg.rope_theta)
+        if cache is not None:
+            bidx = jnp.arange(B)
+            length = cache["k"].shape[1]
+            slot = pos % length if kind == "local" else pos  # ring buffer
+            cache = dict(k=cache["k"].at[bidx, slot].set(k[:, 0]),
+                         v=cache["v"].at[bidx, slot].set(v[:, 0]))
+            if kind == "local":
+                # ring buffer: all slots valid once warm; mask handled by
+                # window size == buffer length
+                o = attn_lib.decode_attention(
+                    q, cache["k"], cache["v"],
+                    jnp.minimum(pos, length - 1), local_window=0,
+                    attn_softcap=cfg.attn_softcap)
+            else:
+                o = attn_lib.decode_attention(q, cache["k"], cache["v"], pos,
+                                              local_window=0,
+                                              attn_softcap=cfg.attn_softcap)
+        else:
+            o = attn_lib.causal_attention(
+                q, k, v, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                local_window=window, attn_softcap=cfg.attn_softcap,
+                kv_shard=kv_shard)
+        attn_out = o.reshape(B, S, H * hd) @ p["wo_rowp"]
+
+    x = x + attn_out
+    if enc_out is not None and "xq_colp" in p:
+        hx = rms_norm(x, p["ln_x_rep"], cfg.norm_eps)
+        KV = cfg.n_kv_heads
+        Se = enc_out.shape[1]
+        xq = (hx @ p["xq_colp"]).reshape(B, S, H, hd)
+        xk = (enc_out @ p["xk_colp"]).reshape(B, Se, KV, hd)
+        xv = (enc_out @ p["xv_colp"]).reshape(B, Se, KV, hd)
+        xo = attn_lib.full_attention(xq, xk, xv, attn_softcap=cfg.attn_softcap)
+        x = x + xo.reshape(B, S, H * hd) @ p["xo_rowp"]
+
+    h2 = rms_norm(x, p["ln2_rep"], cfg.norm_eps)
+    if cfg.n_experts:
+        from repro.models.common import batch_shards
+
+        # blocked dispatch keeps training-scale routing shard-local (D1);
+        # at decode T is tiny (one token/seq) and blocking only fragments
+        # the expert buffers — route globally there.
+        nb = 1 if cache is not None else batch_shards()
+        nb = nb if B % nb == 0 else 1  # dispatch blocks align to data shards
+        y = mlp_lib.moe(p["moe"], h2.reshape(B * S, D), cfg, n_blocks=nb).reshape(B, S, D)
+        if "mlp" in p:
+            y = y + mlp_lib.mlp(p["mlp"], h2)
+    else:
+        y = mlp_lib.mlp(p["mlp"], h2)
+    x = x + y
+    return shard(x, "batch", "seq", None), cache
+
+
+def apply_rec_layer(p, x, cfg: ArchConfig, cache=None):
+    h = rms_norm(x, p["ln1_rep"], cfg.norm_eps)
+    hs = cache["h"] if cache is not None else None
+    cs = cache["conv"] if cache is not None else None
+    y, new_h, new_conv = rglru_lib.rglru_block(p["rglru"], h, cfg, hs, cs)
+    x = x + y
+    h2 = rms_norm(x, p["ln2_rep"], cfg.norm_eps)
+    x = x + mlp_lib.mlp(p["mlp"], h2)
+    new_cache = dict(h=new_h, conv=new_conv) if cache is not None else None
+    return x, new_cache
+
+
+def apply_ssm_layer(p, x, cfg: ArchConfig, cache=None):
+    h = rms_norm(x, p["ln1_rep"], cfg.norm_eps)
+    st = cache["state"] if cache is not None else None
+    cs = cache["conv"] if cache is not None else None
+    y, new_state, new_conv = ssm_lib.ssm_block(p["ssm"], h, cfg, st, cs)
+    x = x + y
+    new_cache = dict(state=new_state, conv=new_conv) if cache is not None else None
+    return x, new_cache
+
+
+def _apply_one(kind, p, x, cfg, positions, cache, pos, enc_out):
+    if kind == "ssm":
+        return apply_ssm_layer(p, x, cfg, cache)
+    if kind == "rec":
+        return apply_rec_layer(p, x, cfg, cache)
+    return apply_attn_layer(p, x, cfg, kind, positions, cache, pos, enc_out)
+
+
+# ----------------------------------------------------------- full model
+def _run_layers(params, x, cfg: ArchConfig, positions, cache=None, pos=None,
+                enc_out=None, remat: bool = False):
+    pat = layer_pattern(cfg)
+    plen = _plen(cfg)
+    n_super = cfg.n_layers // plen if (cfg.scan_layers and cfg.n_layers // plen > 1) else 0
+    new_cache: dict[str, Any] = {"blocks": [], "rem_blocks": []}
+    if cache is not None and "enc_out" in cache:
+        new_cache["enc_out"] = cache["enc_out"]
+
+    if params.get("blocks"):
+        def superblock(x, stacks_i):
+            ps, cs = stacks_i
+            ncs = []
+            for j in range(plen):
+                cj = cs[j] if cs is not None else None
+                x, nc = _apply_one(pat[j], ps[j], x, cfg, positions, cj, pos, enc_out)
+                ncs.append(nc)
+            return x, ncs
+
+        body = jax.checkpoint(superblock) if remat else superblock
+
+        def scan_fn(x, stacks_i):
+            return body(x, stacks_i)
+
+        cstack = cache["blocks"] if cache is not None else None
+
+        x, ncs = jax.lax.scan(
+            scan_fn, x,
+            (params["blocks"], cstack),
+        )
+        new_cache["blocks"] = ncs
+    for i, p in enumerate(params.get("rem_blocks", [])):
+        kind = pat[(n_super * plen if n_super else 0) + i]
+        ci = cache["rem_blocks"][i] if cache is not None else None
+        fn = (lambda p_, x_, c_: _apply_one(kind, p_, x_, cfg, positions, c_, pos, enc_out))
+        if remat:
+            fn = jax.checkpoint(fn)
+        x, nc = fn(p, x, ci)
+        new_cache["rem_blocks"].append(nc)
+    return x, (new_cache if cache is not None else None)
+
+
+def encode(params, cfg: ArchConfig, frames):
+    """Whisper encoder over (stubbed) frame embeddings (B, Se, D)."""
+    x = frames + sinusoidal_embed(jnp.arange(frames.shape[1]), cfg.d_model)[None].astype(frames.dtype)
+    for p in params["encoder"]["blocks"]:
+        h = rms_norm(x, p["ln1_rep"], cfg.norm_eps)
+        B, Se, D = x.shape
+        q = (h @ p["wq_colp"]).reshape(B, Se, cfg.n_heads, cfg.hd)
+        k = (h @ p["wk_colp"]).reshape(B, Se, cfg.n_kv_heads, cfg.hd)
+        v = (h @ p["wv_colp"]).reshape(B, Se, cfg.n_kv_heads, cfg.hd)
+        o = attn_lib.full_attention(q, k, v)
+        x = x + o.reshape(B, Se, -1) @ p["wo_rowp"]
+        h2 = rms_norm(x, p["ln2_rep"], cfg.norm_eps)
+        x = x + mlp_lib.mlp(p["mlp"], h2)
+    return rms_norm(x, params["encoder"]["final_norm_rep"], cfg.norm_eps)
+
+
+def _logits(params, cfg: ArchConfig, x):
+    if cfg.tie_embeddings:
+        logits = x @ params["embed_embed"].T
+    else:
+        logits = x @ params["lm_head_colp"]
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def forward(params, cfg: ArchConfig, batch: dict, remat: bool = False):
+    """Returns logits over the token positions of batch['tokens']."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = params["embed_embed"][tokens]
+    x = shard(x, "batch", "seq", None)
+    enc_out = None
+    n_prefix = 0
+    if cfg.family == "audio":
+        enc_out = encode(params, cfg, batch["frames"])
+        x = x + sinusoidal_embed(jnp.arange(S), cfg.d_model)[None].astype(x.dtype)
+    if cfg.family == "vlm":
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+        n_prefix = batch["patches"].shape[1]
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    x, _ = _run_layers(params, x, cfg, positions, enc_out=enc_out, remat=remat)
+    x = rms_norm(x, params["final_norm_rep"], cfg.norm_eps)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    return _logits(params, cfg, x)
+
+
+def loss_fn(params, cfg: ArchConfig, batch: dict, remat: bool = True):
+    logits = forward(params, cfg, batch, remat=remat)
+    targets = batch["targets"]
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
+    return -ll.mean()
+
+
+def prefill(params, cfg: ArchConfig, batch: dict):
+    """Prefill forward (no targets): returns last-position logits."""
+    logits = forward(params, cfg, batch, remat=False)
+    return logits[:, -1]
+
+
+def serve_step(params, cfg: ArchConfig, cache: dict, tokens, pos, extras=None):
+    """One decode step: tokens (B, 1), pos (B,) -> (logits (B, V), cache)."""
+    B = tokens.shape[0]
+    x = params["embed_embed"][tokens]
+    enc_out = cache.get("enc_out") if cfg.family == "audio" else None
+    if cfg.family == "audio":
+        x = x + sinusoidal_embed(pos[:, None], cfg.d_model).astype(x.dtype)
+    x, new_cache = _run_layers(params, x, cfg, None, cache=cache, pos=pos, enc_out=enc_out)
+    x = rms_norm(x, params["final_norm_rep"], cfg.norm_eps)
+    return _logits(params, cfg, x)[:, 0], new_cache

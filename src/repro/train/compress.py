@@ -1,0 +1,51 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+On a real pod this wraps the DP all-reduce: gradients are quantized to
+int8 (per-tensor absmax scale) before crossing the interconnect, halving
+(vs bf16) or quartering (vs fp32) the DP collective bytes.  The
+quantization error is carried in an error-feedback residual added to the
+next step's gradient, which keeps SGD/Adam convergence (Karimireddy et
+al.).  In this single-host container the compression is applied to the
+gradients themselves so tests can verify the numerics and convergence;
+the roofline §Perf entry quantifies the collective-byte reduction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray):
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32))) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(grads, err_state):
+    """Returns (decompressed grads as seen post-allreduce, new error state)."""
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize_int8(corrected)
+        deq = dequantize_int8(q, s)
+        return deq.astype(g.dtype), corrected - deq
+
+    out = jax.tree.map(one, grads, err_state)
+    new_g = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_e = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_g, new_e
+
+
+def compressed_bytes(params) -> tuple[int, int]:
+    """(uncompressed fp32 bytes, compressed int8+scale bytes) per all-reduce."""
+    raw = sum(p.size * 4 for p in jax.tree.leaves(params))
+    comp = sum(p.size + 4 for p in jax.tree.leaves(params))
+    return raw, comp

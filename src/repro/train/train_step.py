@@ -1,0 +1,78 @@
+"""Microbatched train step: grad accumulation + remat + compression hook."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+from repro.train import compress as C
+from repro.train.optimizer import OptConfig, adamw_update
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    opt_cfg: OptConfig,
+    n_micro: int = 1,
+    use_compression: bool = False,
+    donate: bool = True,
+    as_fn: bool = False,
+):
+    """Returns jit-able train_step(params, opt_state, batch) -> (params,
+    opt_state, metrics).  batch['tokens'/'targets']: (B, S) with B divisible
+    by n_micro; extra modality inputs pass through to the model."""
+
+    def loss_for(params, mb):
+        return T.loss_fn(params, cfg, mb, remat=True)
+
+    grad_fn = jax.value_and_grad(loss_for)
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            loss, grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape((n_micro, b // n_micro) + x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mb):
+                acc, lsum = carry
+                l, g = grad_fn(params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, lsum + l), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(acc_fn, (zero, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+            loss = lsum / n_micro
+
+        if use_compression:
+            grads, new_err = C.compress_grads(grads, opt_state["err"])
+        new_params, new_opt, metrics = adamw_update(
+            grads, {k: v for k, v in opt_state.items() if k != "err"}, params, opt_cfg
+        )
+        if use_compression:
+            new_opt["err"] = new_err
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    if as_fn:  # caller jits with explicit in/out shardings (dry-run)
+        return train_step
+    if donate:
+        return jax.jit(train_step, donate_argnums=(0, 1))
+    return jax.jit(train_step)
+
+
+def init_train_state(cfg: ArchConfig, opt_cfg: OptConfig, key, use_compression=False):
+    from repro.train.optimizer import adamw_init
+
+    params = T.init_params(cfg, key)
+    opt_state = adamw_init(params, opt_cfg)
+    if use_compression:
+        opt_state["err"] = C.init_error_state(params)
+    return params, opt_state

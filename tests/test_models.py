@@ -1,0 +1,143 @@
+"""Per-architecture smoke tests: reduced configs of the same family run a
+forward pass + one train step on CPU, asserting shapes and no NaNs; decode
+consistency checks prefill logits against step-by-step serve_step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, list_archs, reduced
+from repro.models import transformer as T
+from repro.train.data import synthetic_batch
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+ARCHS = list_archs()
+
+
+def _batch(cfg, b=2, s=16, seed=0):
+    return {k: jnp.asarray(v) for k, v in synthetic_batch(cfg, b, s, seed, 0).items()}
+
+
+@pytest.fixture(scope="module")
+def states():
+    return {}
+
+
+def _state(states, arch):
+    if arch not in states:
+        cfg = reduced(get_arch(arch))
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        states[arch] = (cfg, params)
+    return states[arch]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_finite(states, arch):
+    cfg, params = _state(states, arch)
+    batch = _batch(cfg)
+    logits = T.forward(params, cfg, batch)
+    assert logits.shape == (2, 16, cfg.vocab_padded)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step(states, arch):
+    cfg, _ = _state(states, arch)
+    params, opt = init_train_state(cfg, OptConfig(warmup_steps=1), jax.random.PRNGKey(1))
+    step = make_train_step(cfg, OptConfig(warmup_steps=1), n_micro=2, donate=False)
+    batch = _batch(cfg, b=4, s=16)
+    new_params, new_opt, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert int(new_opt["step"]) == 1
+    # params actually moved
+    moved = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params))
+    )
+    assert moved, f"{arch}: train step did not update params"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_serve_step_runs(states, arch):
+    cfg, params = _state(states, arch)
+    B, L = 2, 24
+    cache = T.init_cache(cfg, B, L, dtype=jnp.float32)
+    if cfg.family == "audio":
+        frames = jnp.asarray(np.random.default_rng(0).standard_normal(
+            (B, cfg.encoder_seq, cfg.d_model)).astype(np.float32))
+        cache["enc_out"] = T.encode(params, cfg, frames)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    pos = jnp.zeros((B,), jnp.int32)
+    logits, cache = T.serve_step(params, cfg, cache, tok, pos)
+    assert logits.shape == (B, cfg.vocab_padded)
+    assert bool(jnp.isfinite(logits).all())
+
+
+# subset with strict decode==prefill consistency (cache correctness)
+CONSISTENCY = ["tinyllama-1.1b", "gemma2-9b", "mamba2-780m",
+               "recurrentgemma-2b", "deepseek-v2-236b", "glm4-9b"]
+
+
+@pytest.mark.parametrize("arch", CONSISTENCY)
+def test_decode_matches_prefill(states, arch):
+    """Teacher-forced decode through the KV/state cache reproduces the
+    training-mode logits position by position.
+
+    MoE archs use capacity_factor >= n_experts so routing never drops a
+    token — capacity drops are shape-dependent (T differs between prefill
+    and decode) and would make the comparison vacuous."""
+    import dataclasses
+
+    cfg, params = _state(states, arch)
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    B, S = 2, 12
+    rng = np.random.default_rng(3)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (B, S), dtype=np.int32))
+    full = T.forward(params, cfg, {"tokens": tokens})  # (B, S, V)
+
+    cache = T.init_cache(cfg, B, S, dtype=jnp.float32)
+    step = jax.jit(lambda p, c, t, pos: T.serve_step(p, cfg, c, t, pos))
+    outs = []
+    for i in range(S):
+        logits, cache = step(params, cache, tokens[:, i : i + 1],
+                             jnp.full((B,), i, jnp.int32))
+        outs.append(logits)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(dec), np.asarray(full), rtol=2e-2, atol=2e-3,
+        err_msg=f"{arch}: decode diverges from prefill",
+    )
+
+
+def test_all_archs_registered():
+    assert len(ARCHS) == 10
+    want = {
+        "arctic-480b", "deepseek-v2-236b", "whisper-base", "mamba2-780m",
+        "tinyllama-1.1b", "starcoder2-15b", "glm4-9b", "gemma2-9b",
+        "llava-next-34b", "recurrentgemma-2b",
+    }
+    assert set(ARCHS) == want
+
+
+def test_param_counts_in_range():
+    """Full configs land near their advertised sizes."""
+    expect = {
+        "arctic-480b": (350e9, 550e9),
+        "deepseek-v2-236b": (180e9, 280e9),
+        "tinyllama-1.1b": (0.8e9, 1.4e9),
+        # our stack is uniformly SwiGLU (3 FFN mats); upstream StarCoder2
+        # uses a 2-matrix GELU FFN, so the same dims land ~1.4x heavier
+        "starcoder2-15b": (14e9, 24e9),
+        "glm4-9b": (7e9, 12e9),
+        "gemma2-9b": (7e9, 12e9),
+        "llava-next-34b": (28e9, 40e9),
+        "recurrentgemma-2b": (1.6e9, 3.5e9),
+        "mamba2-780m": (0.55e9, 1.0e9),
+        "whisper-base": (0.05e9, 0.12e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_arch(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B params out of [{lo/1e9}, {hi/1e9}]"

@@ -1,0 +1,115 @@
+"""PPSP application: BFS, BiBFS and Hub^2 vs networkx oracles (paper §5.1)."""
+import jax.numpy as jnp
+import networkx as nx
+import numpy as np
+import pytest
+
+from repro.apps.hub2 import build_hub_index, make_hub2_engine, pick_hubs
+from repro.apps.ppsp import make_bfs_engine, make_bibfs_engine
+from repro.core.graph import multi_component_graph, random_graph
+from repro.core.semiring import INF
+
+from conftest import nx_of
+
+
+def _nx_dist(G, s, t):
+    try:
+        return nx.shortest_path_length(G, s, t)
+    except nx.NetworkXNoPath:
+        return INF
+
+
+def _check(engine, G, pairs):
+    for s, t in pairs:
+        got = int(engine.query(jnp.asarray([s, t], jnp.int32))["dist"])
+        want = _nx_dist(G, s, t)
+        assert got == want, f"({s},{t}): got {got} want {want}"
+
+
+@pytest.mark.parametrize("directed", [True, False])
+def test_bibfs_matches_nx(directed):
+    g = random_graph(80, 2.5, seed=21, directed=directed)
+    G = nx_of(g, directed=True)  # our Graph is always directed edges
+    eng = make_bibfs_engine(g, capacity=4)
+    rng = np.random.default_rng(1)
+    pairs = [(int(a), int(b)) for a, b in rng.integers(0, g.n_real, (15, 2))]
+    _check(eng, G, pairs)
+
+
+def test_bibfs_unreachable_early_stop():
+    """BTC-like multi-CC graph: unreachable pairs terminate via the
+    empty-frontier aggregator rule, not timeout."""
+    g = multi_component_graph(4, 25, 2.0, seed=3)
+    G = nx_of(g)
+    eng = make_bibfs_engine(g, capacity=4)
+    # vertices in different components
+    res = eng.query(jnp.asarray([0, 99], jnp.int32))
+    assert int(res["dist"]) >= INF
+    assert _nx_dist(G, 0, 99) == INF
+    assert eng.stats.supersteps_total < 50
+
+
+def test_bfs_visits_less_when_source_in_small_cc():
+    """Paper: BFS from a small CC beats BiBFS whose backward search floods
+    the giant CC."""
+    g = multi_component_graph(2, 100, 2.0, seed=5)
+    bfs = make_bfs_engine(g)
+    bibfs = make_bibfs_engine(g)
+    # source in component 0, target in component 1 (bigger visit for BiBFS)
+    q = jnp.asarray([3, 150], jnp.int32)
+    v_bfs = int(bfs.query(q)["visited"])
+    v_bi = int(bibfs.query(q)["visited"])
+    assert v_bfs <= v_bi
+
+
+# ------------------------------------------------------------------ Hub^2
+@pytest.fixture(scope="module")
+def hub_setup(ba_graph):
+    idx = build_hub_index(ba_graph, k=8, capacity=4)
+    return ba_graph, idx
+
+
+def test_hub_index_labels_correct(hub_setup):
+    """d(h, v) from the engine-built index equals networkx BFS."""
+    g, idx = hub_setup
+    G = nx_of(g)
+    hub_dist = np.asarray(idx.hub_dist)
+    for i, h in enumerate(np.asarray(idx.hub_ids)):
+        lengths = nx.single_source_shortest_path_length(G, int(h))
+        for v in range(0, g.n_real, 7):
+            want = lengths.get(v, INF)
+            assert hub_dist[i, v] == want
+
+
+def test_hub2_query_exact(hub_setup):
+    """Hub^2 PPSP distances are exact (index upper bound + residual BiBFS)."""
+    g, idx = hub_setup
+    G = nx_of(g)
+    eng = make_hub2_engine(g, idx, capacity=4)
+    rng = np.random.default_rng(9)
+    pairs = [(int(a), int(b)) for a, b in rng.integers(0, g.n_real, (20, 2))]
+    for s, t in pairs:
+        got = int(eng.query(jnp.asarray([s, t], jnp.int32))["dist"])
+        want = _nx_dist(G, s, t)
+        assert min(got, INF) == want, f"({s},{t}): got {got} want {want}"
+
+
+def test_hub2_reduces_access(hub_setup):
+    """Access rate with the index is below plain BiBFS on hub-ful graphs
+    (paper Tables 5-6)."""
+    g, idx = hub_setup
+    bibfs = make_bibfs_engine(g, capacity=4)
+    hub2 = make_hub2_engine(g, idx, capacity=4)
+    rng = np.random.default_rng(2)
+    pairs = [(int(a), int(b)) for a, b in rng.integers(0, g.n_real, (10, 2))]
+    v_plain = sum(int(bibfs.query(jnp.asarray(p, jnp.int32))["visited"]) for p in pairs)
+    v_hub = sum(int(hub2.query(jnp.asarray(p, jnp.int32))["visited"]) for p in pairs)
+    assert v_hub < v_plain
+
+
+def test_pick_hubs_highest_degree(ba_graph):
+    hubs = pick_hubs(ba_graph, 5)
+    deg = np.asarray(ba_graph.in_deg) + np.asarray(ba_graph.out_deg)
+    deg = deg[: ba_graph.n_real]
+    top = set(np.argsort(-deg, kind="stable")[:5].tolist())
+    assert set(hubs.tolist()) == top

@@ -1,0 +1,114 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import Graph
+from repro.core.semiring import INF, MAX_RIGHT, MIN_PLUS, MIN_RIGHT
+from repro.kernels import frontier, ref
+from repro.train import checkpoint as ckpt
+from repro.train.compress import dequantize_int8, quantize_int8
+
+
+# ------------------------------------------------------ graph strategies
+@st.composite
+def graphs(draw, max_n=24, max_e=60):
+    n = draw(st.integers(2, max_n))
+    ne = draw(st.integers(0, max_e))
+    src = draw(st.lists(st.integers(0, n - 1), min_size=ne, max_size=ne))
+    dst = draw(st.lists(st.integers(0, n - 1), min_size=ne, max_size=ne))
+    return Graph.from_edges(np.array(src, np.int32), np.array(dst, np.int32), n)
+
+
+@st.composite
+def graph_and_x(draw):
+    g = draw(graphs())
+    vals = draw(
+        st.lists(st.integers(0, 30) | st.just(int(INF)), min_size=g.n, max_size=g.n)
+    )
+    return g, np.array(vals, np.int32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(graph_and_x())
+def test_blocks_equal_coo_min_right(gx):
+    """Block-sparse layout == COO reference on arbitrary graphs."""
+    g, x = gx
+    xj = jnp.asarray(x[None])
+    want = np.asarray(ref.propagate_coo(g, MIN_RIGHT, xj))
+    bs = g.to_blocks(8, MIN_RIGHT.add_id)
+    got = np.asarray(ref.propagate_blocks_ref(bs, MIN_RIGHT, xj))
+    got_pl = np.asarray(frontier.propagate_blocks(bs, MIN_RIGHT, xj, interpret=True))
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(got_pl, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(graph_and_x())
+def test_min_plus_relaxation_monotone(gx):
+    """x' = min(x, propagate(x)) is monotone non-increasing and converges to
+    the all-pairs-from-sources fixpoint (Bellman-Ford safety)."""
+    g, x = gx
+    xj = jnp.asarray(x[None])
+    prev = xj
+    for _ in range(g.n + 1):
+        nxt = jnp.minimum(prev, ref.propagate_coo(g, MIN_PLUS, prev))
+        assert bool((nxt <= prev).all())
+        prev = nxt
+    # converged: one more step is a no-op
+    again = jnp.minimum(prev, ref.propagate_coo(g, MIN_PLUS, prev))
+    np.testing.assert_array_equal(np.asarray(again), np.asarray(prev))
+
+
+@settings(max_examples=20, deadline=None)
+@given(graphs())
+def test_reverse_is_involution(g):
+    rr = g.reverse().reverse()
+    def key(gg):
+        s, d = np.asarray(gg.src), np.asarray(gg.dst)
+        return sorted(zip(s.tolist(), d.tolist()))
+    assert key(rr) == key(g)
+    np.testing.assert_array_equal(np.asarray(rr.in_deg), np.asarray(g.in_deg))
+
+
+@settings(max_examples=20, deadline=None)
+@given(graph_and_x())
+def test_propagate_permutation_equivariant(gx):
+    """Relabeling vertices commutes with propagation."""
+    g, x = gx
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(g.n).astype(np.int32)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(g.n)
+    g2 = Graph.from_edges(perm[np.asarray(g.src)], perm[np.asarray(g.dst)], g.n)
+    y1 = np.asarray(ref.propagate_coo(g, MIN_RIGHT, jnp.asarray(x[None])))[0]
+    y2 = np.asarray(ref.propagate_coo(g2, MIN_RIGHT, jnp.asarray(x[inv][None])))[0]
+    np.testing.assert_array_equal(y2[perm], y1)
+
+
+# ---------------------------------------------------------- compression
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(-1e4, 1e4, allow_nan=False), min_size=1, max_size=64))
+def test_quantize_error_bound(vals):
+    x = jnp.asarray(np.array(vals, np.float32))
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s)) - np.asarray(x))
+    assert err.max() <= float(s) * 0.5 + 1e-6
+
+
+# ---------------------------------------------------------- checkpoints
+@settings(max_examples=15, deadline=None)
+@given(
+    st.lists(
+        st.tuples(st.integers(1, 5), st.integers(1, 5)), min_size=1, max_size=4
+    ),
+    st.integers(0, 2**31 - 1),
+)
+def test_checkpoint_roundtrip(shapes, seed):
+    rng = np.random.default_rng(seed)
+    tree = {f"a{i}": rng.standard_normal(s).astype(np.float32) for i, s in enumerate(shapes)}
+    flat = ckpt._flatten(tree)
+    back = ckpt._unflatten_into(tree, flat)
+    for k in tree:
+        np.testing.assert_array_equal(back[k], tree[k])

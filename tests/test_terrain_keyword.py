@@ -1,0 +1,116 @@
+"""Terrain SSSP (paper §5.3) vs scipy Dijkstra; graph keyword search
+(paper §5.5) vs a brute-force hop oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from scipy.sparse import csr_matrix
+from scipy.sparse.csgraph import dijkstra
+
+from repro.apps.keyword import MAXK, make_keyword_engine, make_vertex_text
+from repro.apps.terrain import make_terrain_engine
+from repro.core.graph import grid_terrain, random_graph
+from repro.core.semiring import INF
+
+
+@pytest.fixture(scope="module")
+def terrain():
+    g, coords = grid_terrain(12, 14, eps_subdiv=2, seed=1)
+    return g, coords
+
+
+def _sp_dist(g, s):
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    w = np.asarray(g.w)
+    m = csr_matrix((w, (src, dst)), shape=(g.n, g.n))
+    return dijkstra(m, indices=s)
+
+
+def test_terrain_sssp_exact(terrain):
+    g, coords = terrain
+    eng = make_terrain_engine(g, coords, capacity=2)
+    rng = np.random.default_rng(5)
+    for _ in range(4):
+        s, t = rng.integers(0, g.n_real, 2)
+        want = _sp_dist(g, int(s))[int(t)]
+        got = float(eng.query(jnp.asarray([int(s), int(t)], jnp.int32))["dist"])
+        np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+def test_terrain_early_termination_access(terrain):
+    """Near pairs access a small fraction of the network (paper Table 10)."""
+    g, coords = terrain
+    eng = make_terrain_engine(g, coords, capacity=2)
+    near = eng.query(jnp.asarray([0, 2], jnp.int32))
+    # s=0 and its nearby vertex: early termination keeps access low
+    assert int(near["visited"]) < g.n_real // 2
+
+
+def test_terrain_edge_weights_euclidean(terrain):
+    g, coords = terrain
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    w = np.asarray(g.w)
+    want = np.linalg.norm(coords[src] - coords[dst], axis=1)
+    np.testing.assert_allclose(w, want, rtol=1e-5)
+
+
+# ------------------------------------------------------------ keyword
+def _oracle_keyword(g, tokens, kws, delta_max):
+    """For every root r and keyword k: hop distance to the closest match
+    along forward edges, capped at delta_max."""
+    n = g.n_real
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    adj = [[] for _ in range(n)]  # forward adjacency
+    for s, d in zip(src, dst):
+        if s < n and d < n:
+            adj[s].append(d)
+    out = np.full((len(kws), n), INF, np.int64)
+    for i, k in enumerate(kws):
+        # multi-source BFS from matches along REVERSE edges == forward hop
+        dist = np.full(n, INF, np.int64)
+        frontier = [v for v in range(n) if k in tokens[v]]
+        for v in frontier:
+            dist[v] = 0
+        hop = 0
+        while frontier and hop < delta_max:
+            hop += 1
+            nxt = []
+            for v in range(n):
+                if dist[v] >= INF:
+                    for u in adj[v]:
+                        if dist[u] == hop - 1:
+                            dist[v] = hop
+                            nxt.append(v)
+                            break
+            frontier = nxt
+        out[i] = dist
+    return out
+
+
+def test_keyword_roots_match_oracle():
+    g = random_graph(50, 2.5, seed=41, directed=True)
+    tokens = make_vertex_text(g.n_real, 15, 2, seed=42)
+    tok_sets = [set(tokens[v].tolist()) for v in range(g.n_real)]
+    delta = 3
+    eng = make_keyword_engine(g, np.pad(tokens, ((0, g.n - g.n_real), (0, 0)),
+                                        constant_values=-2), delta_max=delta)
+    rng = np.random.default_rng(6)
+    for _ in range(5):
+        kws = rng.integers(0, 10, 2).tolist()
+        q = np.full(MAXK, -1, np.int32)
+        q[: len(kws)] = kws
+        res = eng.query(jnp.asarray(q))
+        dists = _oracle_keyword(g, tok_sets, kws, delta)
+        want_roots = {
+            v for v in range(g.n_real) if all(dists[i, v] < INF for i in range(len(kws)))
+        }
+        assert int(res["num_roots"]) == len(want_roots), f"kws={kws}"
+        # top roots' scores equal the oracle's summed hops
+        top = np.asarray(res["top_roots"])
+        scores = np.asarray(res["top_scores"])
+        for r, sc in zip(top, scores):
+            if sc < INF and r < g.n_real:
+                assert int(r) in want_roots
+                assert sc == dists[:, int(r)].sum(), f"root {r} kws={kws}"

@@ -1,0 +1,158 @@
+"""XML keyword search (SLCA / ELCA / MaxMatch) vs brute-force oracles."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps.keyword import MAXK, make_vertex_text
+from repro.apps.xmlkw import (
+    MaxMatch,
+    SLCALevelAligned,
+    SLCANaive,
+    build_xml_index,
+    make_xml_engine,
+)
+from repro.core.graph import random_tree
+
+
+# ------------------------------------------------------------- oracles
+def _children(parent):
+    ch = [[] for _ in parent]
+    for v, p in enumerate(parent):
+        if p >= 0:
+            ch[p].append(v)
+    return ch
+
+
+def _subtree_kw(parent, tokens, keywords):
+    """K[v] = set of query keywords appearing in subtree T_v."""
+    n = len(parent)
+    K = [set() for _ in range(n)]
+    for v in range(n - 1, -1, -1):  # children have larger ids (generator)
+        for i, k in enumerate(keywords):
+            if k in tokens[v]:
+                K[v].add(i)
+        if parent[v] >= 0:
+            K[parent[v]] |= K[v]
+    return K
+
+
+def oracle_slca(parent, tokens, keywords):
+    n = len(parent)
+    K = _subtree_kw(parent, tokens, keywords)
+    ch = _children(parent)
+    full = set(range(len(keywords)))
+    cover = [K[v] == full for v in range(n)]
+    return {
+        v
+        for v in range(n)
+        if cover[v] and not any(cover[c] for c in ch[v])
+    }
+
+
+def oracle_elca(parent, tokens, keywords):
+    n = len(parent)
+    K = _subtree_kw(parent, tokens, keywords)
+    ch = _children(parent)
+    full = set(range(len(keywords)))
+    out = set()
+    for v in range(n):
+        own = {i for i, k in enumerate(keywords) if k in tokens[v]}
+        for c in ch[v]:
+            if K[c] != full:
+                own |= K[c]
+        if own == full:
+            out.add(v)
+    return out
+
+
+def oracle_maxmatch(parent, tokens, keywords):
+    """All vertices kept in the pruned matching trees rooted at SLCAs."""
+    n = len(parent)
+    K = _subtree_kw(parent, tokens, keywords)
+    ch = _children(parent)
+    slca = oracle_slca(parent, tokens, keywords)
+    kept = set()
+
+    def down(v):
+        kept.add(v)
+        # paper: v sends to every child NOT strictly dominated by a sibling
+        # (K(u1) ⊂ K(u2)); emptiness alone does not prune.
+        for c in ch[v]:
+            dominated = any(
+                K[c] < K[sib] for sib in ch[v] if sib != c
+            )
+            if not dominated:
+                down(c)
+
+    for r in slca:
+        down(r)
+    return kept
+
+
+# -------------------------------------------------------------- helpers
+def _setup(n=60, seed=0, vocab=12):
+    g, parent = random_tree(n, max_fanout=4, seed=seed)
+    tokens = make_vertex_text(n, vocab, 3, seed=seed + 1)
+    idx = build_xml_index(parent, tokens, g.n)
+    tok_sets = [set(tokens[v].tolist()) for v in range(n)]
+    return g, parent, tokens, idx, tok_sets
+
+
+def _query(*kws):
+    q = np.full(MAXK, -1, np.int32)
+    q[: len(kws)] = kws
+    return jnp.asarray(q)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("prog_cls", [SLCANaive, SLCALevelAligned])
+def test_slca(seed, prog_cls):
+    g, parent, tokens, idx, tok_sets = _setup(seed=seed)
+    eng = make_xml_engine(prog_cls, g, idx, capacity=4)
+    rng = np.random.default_rng(seed)
+    for _ in range(5):
+        kws = rng.integers(0, 8, rng.integers(1, 4)).tolist()
+        res = eng.query(_query(*kws))
+        got = set(np.nonzero(np.asarray(res["slca"])[: len(parent)])[0].tolist())
+        want = oracle_slca(parent, tok_sets, kws)
+        assert got == want, f"kws={kws}"
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_elca(seed):
+    g, parent, tokens, idx, tok_sets = _setup(seed=seed)
+    eng = make_xml_engine(SLCALevelAligned, g, idx, capacity=4)
+    rng = np.random.default_rng(seed + 10)
+    for _ in range(5):
+        kws = rng.integers(0, 8, rng.integers(1, 4)).tolist()
+        res = eng.query(_query(*kws))
+        got = set(np.nonzero(np.asarray(res["elca"])[: len(parent)])[0].tolist())
+        want = oracle_elca(parent, tok_sets, kws)
+        assert got == want, f"kws={kws}"
+
+
+@pytest.mark.parametrize("seed", [0, 4])
+def test_maxmatch(seed):
+    g, parent, tokens, idx, tok_sets = _setup(seed=seed)
+    eng = make_xml_engine(MaxMatch, g, idx, capacity=2)
+    rng = np.random.default_rng(seed + 20)
+    for _ in range(4):
+        kws = rng.integers(0, 8, rng.integers(1, 4)).tolist()
+        res = eng.query(_query(*kws))
+        got = set(np.nonzero(np.asarray(res["labeled"])[: len(parent)])[0].tolist())
+        want = oracle_maxmatch(parent, tok_sets, kws)
+        assert got == want, f"kws={kws}"
+
+
+def test_level_aligned_matches_naive():
+    """The paper's two SLCA algorithms agree query-for-query."""
+    g, parent, tokens, idx, _ = _setup(seed=7)
+    e1 = make_xml_engine(SLCANaive, g, idx, capacity=4)
+    e2 = make_xml_engine(SLCALevelAligned, g, idx, capacity=4)
+    rng = np.random.default_rng(7)
+    for _ in range(5):
+        kws = rng.integers(0, 10, 2).tolist()
+        q = _query(*kws)
+        r1 = np.asarray(e1.query(q)["slca"])
+        r2 = np.asarray(e2.query(q)["slca"])
+        np.testing.assert_array_equal(r1, r2)
