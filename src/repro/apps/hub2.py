@@ -100,6 +100,10 @@ class HubLabelBFS(VertexProgram):
 
 def build_hub_index(graph: Graph, k: int, capacity: int = 8, backend: str = "coo") -> HubIndex:
     """Run the |H| BFS queries through the engine and assemble the labels."""
+    if backend != "coo":
+        # HubLabelBFS mixes min_right and max_right on the same view; one
+        # tile table can only encode one add-identity (DESIGN.md §2).
+        raise ValueError("build_hub_index supports only the coo backend")
     hubs = pick_hubs(graph, k)
     is_hub = jnp.zeros((graph.n,), bool).at[jnp.asarray(hubs)].set(True)
     eng = QuegelEngine(
@@ -186,14 +190,20 @@ class Hub2PPSP(VertexProgram):
         )
 
 
-def make_hub2_engine(graph: Graph, index: HubIndex, capacity: int = 8, **kw):
+def make_hub2_engine(graph: Graph, index: HubIndex, capacity: int = 8, *,
+                     block: int = 128, **kw):
+    from repro.apps.ppsp import blocks_for
+
     rev = graph.reverse()
+    # Hub2PPSP propagates only min_right (both views), so tile backends work
+    if "blocks" not in kw:
+        kw["blocks"] = blocks_for(graph, MIN_RIGHT.add_id, kw, block)
     return QuegelEngine(
         graph,
         Hub2PPSP(),
         capacity,
         index=index,
-        aux_graphs={"rev": (rev, None)},
+        aux_graphs={"rev": (rev, blocks_for(rev, MIN_RIGHT.add_id, kw, block))},
         example_query=jnp.zeros((2,), jnp.int32),
         **kw,
     )

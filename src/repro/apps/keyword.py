@@ -99,9 +99,12 @@ import jax  # noqa: E402  (used in init's vmap)
 
 
 def make_keyword_engine(
-    graph: Graph, tokens: np.ndarray, capacity: int = 8, delta_max: int = 3, **kw
+    graph: Graph, tokens: np.ndarray, capacity: int = 8, delta_max: int = 3, *,
+    block: int = 128, **kw
 ):
     """Reverse graph carries weight N so min-plus transports hop*N+vid."""
+    from repro.apps.ppsp import blocks_for
+
     rev = graph.reverse()
     rev_w = Graph(
         n=rev.n,
@@ -113,12 +116,13 @@ def make_keyword_engine(
         out_deg=rev.out_deg,
     )
     idx = InvertedIndex(tokens)
+    # propagation only ever flows along the weighted reverse view (min-plus)
     return QuegelEngine(
         graph,
         GraphKeywordSearch(rev.n, delta_max),
         capacity,
         index=idx,
-        aux_graphs={"rev": (rev_w, None)},
+        aux_graphs={"rev": (rev_w, blocks_for(rev_w, MIN_PLUS.add_id, kw, block))},
         example_query=jnp.full((MAXK,), -1, jnp.int32),
         **kw,
     )

@@ -81,24 +81,42 @@ class BiBFSProgram(VertexProgram):
         return dict(dist=jnp.minimum(state["best"], INF), visited=visited)
 
 
-def make_bibfs_engine(graph: Graph, capacity: int = 8, **kw):
+def blocks_for(graph: Graph, add_id, kw: dict, block: int = 128):
+    """Auto-build the block-sparse adjacency when a tile backend is chosen.
+
+    Returns None for the coo backend, so constructors can wire
+    ``backend=`` uniformly: ``make_*_engine(g, backend='pallas')`` just
+    works.  Callers guard their *main* view with ``if "blocks" not in
+    kw`` to honour explicitly-passed tiles; auxiliary views always build
+    their own (the caller's tiles describe a different graph).
+    """
+    if kw.get("backend", "coo") == "coo":
+        return None
+    return graph.to_blocks(block, add_id)
+
+
+def make_bibfs_engine(graph: Graph, capacity: int = 8, *, block: int = 128, **kw):
     """Convenience constructor wiring the reverse-graph view."""
     from repro.core.engine import QuegelEngine
 
     rev = graph.reverse()
+    if "blocks" not in kw:
+        kw["blocks"] = blocks_for(graph, MIN_RIGHT.add_id, kw, block)
     return QuegelEngine(
         graph,
         BiBFSProgram(),
         capacity,
-        aux_graphs={"rev": (rev, None)},
+        aux_graphs={"rev": (rev, blocks_for(rev, MIN_RIGHT.add_id, kw, block))},
         example_query=jnp.zeros((2,), jnp.int32),
         **kw,
     )
 
 
-def make_bfs_engine(graph: Graph, capacity: int = 8, **kw):
+def make_bfs_engine(graph: Graph, capacity: int = 8, *, block: int = 128, **kw):
     from repro.core.engine import QuegelEngine
 
+    if "blocks" not in kw:
+        kw["blocks"] = blocks_for(graph, MIN_RIGHT.add_id, kw, block)
     return QuegelEngine(
         graph,
         BFSProgram(),

@@ -35,6 +35,25 @@ from repro.core.semiring import Semiring
 from repro.kernels import ref
 
 
+def _shard_map(body, mesh, in_specs, out_specs):
+    """Version shim.  Probe kwarg acceptance, not namespace presence:
+    current jax has jax.shard_map(check_vma=), the 0.6.x window has
+    jax.shard_map(check_rep=), and older jax only ships
+    jax.experimental.shard_map.shard_map(check_rep=)."""
+    if hasattr(jax, "shard_map"):
+        sm = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as sm
+    for kw in ({"check_vma": False}, {"check_rep": False}):
+        try:
+            return sm(
+                body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+            )
+        except TypeError:
+            continue
+    return sm(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+
 def _pad_partition(ids_sorted_key, src, dst, w, n_parts, key_of):
     """Split COO edges into n_parts buckets by key_of, padding to equal size."""
     buckets = [[] for _ in range(n_parts)]
@@ -108,12 +127,11 @@ def make_propagate_sharded(sg: ShardedGraph, mesh: Mesh, axis: str, sr: Semiring
         def propagate(x, frontier=None):
             if frontier is not None:
                 x = jnp.where(frontier, x, jnp.asarray(sr.add_id, x.dtype))
-            f = jax.shard_map(
+            f = _shard_map(
                 body,
                 mesh=mesh,
                 in_specs=(P(None, None), spec_e, spec_e, spec_e, spec_e),
                 out_specs=P(None, None),
-                check_vma=False,
             )
             return f(x, sg.srcp, sg.dstp, sg.wp, sg.valid)
 
@@ -133,12 +151,11 @@ def make_propagate_sharded(sg: ShardedGraph, mesh: Mesh, axis: str, sr: Semiring
         def propagate(x, frontier=None):
             if frontier is not None:
                 x = jnp.where(frontier, x, jnp.asarray(sr.add_id, x.dtype))
-            f = jax.shard_map(
+            f = _shard_map(
                 body,
                 mesh=mesh,
                 in_specs=(P(None, None), spec_e, spec_e, spec_e, spec_e),
                 out_specs=P(None, None),
-                check_vma=False,
             )
             return f(x, sg.srcp, sg.dstp, sg.wp, sg.valid)
 

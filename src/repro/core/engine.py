@@ -7,6 +7,17 @@ dense slot table (leading axis C) and the vertex program is ``vmap``-ed over
 slots.  The single device->host sync per round (reading the ``done`` flags)
 is the analogue of the paper's one barrier per super-round.
 
+Hot path (DESIGN.md §3): admission and the superstep advance are FUSED into
+one jitted call per round.  The slot table is donated
+(``donate_argnums=0``) so each round updates the ``(C, V, ...)`` slabs in
+place instead of copying them; admission of up to C queued queries is one
+batched scatter (``vmap``-ed ``init`` + ``.at[slots].set(mode='drop')``)
+inside the same dispatch; and slot liveness is mirrored host-side so a
+round performs exactly ONE device->host sync (the ``done``/``step``
+readback).  The pre-refactor path (per-query admission dispatches, live
+readback before every round, undonated copies) is preserved under
+``legacy=True`` as the benchmark baseline.
+
 Data taxonomy (paper §3.2) maps as:
   V-data  : the ``Graph``/index arrays, closed over by the jitted round —
             loaded once, shared by all queries (decoupled from querying).
@@ -82,10 +93,17 @@ class EngineStats:
     queries_done: int = 0
     supersteps_total: int = 0
     round_times: list = dataclasses.field(default_factory=list)
+    # per-query submit->result latency, appended at completion (bench: p50/p95)
+    query_latencies: list = dataclasses.field(default_factory=list)
 
     @property
     def wall_time(self) -> float:
         return float(sum(self.round_times))
+
+    def latency_percentile(self, q: float) -> float:
+        if not self.query_latencies:
+            return float("nan")
+        return float(np.percentile(self.query_latencies, q))
 
 
 class QuegelEngine:
@@ -93,6 +111,16 @@ class QuegelEngine:
 
     capacity  : the paper's C — max queries in flight per super-round.
     backend   : 'coo' (segment ops), 'blocks_ref', or 'pallas'.
+    legacy    : keep the pre-overhaul round structure (per-query admission
+                dispatches, live readback, per-query extraction, no
+                donation) — the A/B baseline for the benchmark harness;
+                results and stats are identical.
+    donate    : donate the slot table to the round dispatch so XLA aliases
+                outputs to inputs (in-place update, no per-round copy of
+                the (C, V, ...) slabs).  Default 'auto': on for TPU/GPU,
+                off for CPU where donated calls skip jit's C++ fast path
+                and the dispatch penalty exceeds the copy saved
+                (DESIGN.md §3).
     """
 
     def __init__(
@@ -108,6 +136,8 @@ class QuegelEngine:
         interpret: bool = True,
         example_query: Any = None,
         propagate_override: Optional[dict] = None,
+        legacy: bool = False,
+        donate: Any = "auto",
     ):
         """``propagate_override`` maps a view name ('default', 'rev', ...)
         to a callable (semiring, x, frontier) -> y, e.g. the shard_map
@@ -124,10 +154,18 @@ class QuegelEngine:
         self.aux_graphs = {k: (g_, b_) for k, (g_, b_) in (aux_graphs or {}).items()}
         self.propagate_override = dict(propagate_override or {})
         self.interpret = interpret
+        self.legacy = bool(legacy)
+        if donate == "auto":
+            donate = jax.default_backend() not in ("cpu",)
+        self.donate = bool(donate)
         self._queue: list[tuple[int, Any]] = []
         self._next_qid = 0
         self._results: dict[int, Any] = {}
         self._slot_qid: dict[int, int] = {}
+        self._submit_t: dict[int, float] = {}
+        # Host mirror of slot liveness: updated from the same done-readback
+        # every round already pays, so admission never touches the device.
+        self._live_mask = np.zeros(self.capacity, dtype=bool)
         self.stats = EngineStats()
         if example_query is None:
             raise ValueError("example_query required to shape the slot table")
@@ -155,6 +193,8 @@ class QuegelEngine:
         g, prog, C = self.graph, self.program, self.capacity
         proto_q = jax.tree.map(jnp.asarray, example_query)
         proto_state = prog.init(g, proto_q, self.index)
+        # host-side copy for cheap np.stack when batching admissions
+        self._proto_q_np = jax.tree.map(np.asarray, proto_q)
 
         def stack(proto):
             return jax.tree.map(lambda x: jnp.zeros((C,) + jnp.shape(x), jnp.asarray(x).dtype), proto)
@@ -179,6 +219,25 @@ class QuegelEngine:
             slots["step"] = slots["step"].at[idx].set(0)
             slots["live"] = slots["live"].at[idx].set(True)
             slots["done"] = slots["done"].at[idx].set(False)
+            return slots
+
+        def admit_batch(slots, admit_mask, queries):
+            """Fill all newly-assigned slots in ONE dispatch (DESIGN.md §3).
+
+            admit_mask : (C,) bool — True where a query is being admitted.
+            queries    : (C, ...) query pytree *aligned by slot* (row s is
+                         the query admitted into slot s; non-admitted rows
+                         hold the old slot query).  Host-side alignment
+                         turns admission into a branch-free masked select —
+                         no XLA scatter, which is slow on CPU.
+            """
+            st = jax.vmap(lambda q: prog.init(g, q, self.index))(queries)
+            slots = dict(slots)
+            slots["state"] = tree_where(admit_mask, st, slots["state"])
+            slots["query"] = tree_where(admit_mask, queries, slots["query"])
+            slots["step"] = jnp.where(admit_mask, 0, slots["step"])
+            slots["live"] = slots["live"] | admit_mask
+            slots["done"] = slots["done"] & ~admit_mask
             return slots
 
         def super_round(slots):
@@ -211,48 +270,122 @@ class QuegelEngine:
             q = jax.tree.map(lambda tab: tab[idx], slots["query"])
             return prog.extract(st, q)
 
-        self._admit = jax.jit(admit)
-        self._super_round = jax.jit(super_round)
         self._extract = jax.jit(extract)
+        if self.legacy:
+            self._admit = jax.jit(admit)
+            self._super_round = jax.jit(super_round)
+        else:
+            # Donating the slot table lets XLA alias every (C, V, ...) slab
+            # output to its input: the hot loop mutates in place, no copy.
+            dn = (0,) if self.donate else ()
+            self._round = jax.jit(super_round, donate_argnums=dn)
+            self._round_admit = jax.jit(
+                lambda slots, admit_mask, queries: super_round(
+                    admit_batch(slots, admit_mask, queries)
+                ),
+                donate_argnums=dn,
+            )
+
+            def extract_all(slots):
+                return jax.vmap(prog.extract)(slots["state"], slots["query"])
+
+            # one dispatch extracts every slot; run_round slices the rows
+            # of finished queries host-side (results are small Q-data).
+            self._extract_all = jax.jit(extract_all)
 
     # -------------------------------------------------------------- client
     def submit(self, query) -> int:
-        """Append a query to the queue (paper: console or batch file)."""
+        """Append a query to the queue (paper: console or batch file).
+
+        Query content is staged host-side (numpy) so batched admission can
+        stack it without device round-trips; jit converts on dispatch.
+        """
         qid = self._next_qid
         self._next_qid += 1
-        self._queue.append((qid, jax.tree.map(jnp.asarray, query)))
+        self._queue.append((qid, jax.tree.map(np.asarray, query)))
+        self._submit_t[qid] = time.perf_counter()
         return qid
 
     def _free_slots(self) -> list[int]:
-        live = np.asarray(self._slots["live"])
+        """Slots available for admission.  Legacy mode reads liveness back
+        from the device (the extra pre-round sync the overhaul removed);
+        the fused path serves it from the host mirror for free."""
+        if self.legacy:
+            live = np.asarray(self._slots["live"])
+        else:
+            live = self._live_mask
         return [i for i in range(self.capacity) if not live[i]]
+
+    def _any_live(self) -> bool:
+        if self.legacy:
+            return bool(np.asarray(self._slots["live"]).any())
+        return bool(self._live_mask.any())
 
     def run_round(self) -> list[tuple[int, Any]]:
         """One super-round: admit from queue, advance all live slots one
-        superstep, collect finished queries.  Returns [(qid, result)]."""
+        superstep, collect finished queries.  Returns [(qid, result)].
+
+        Fused mode is one dispatch (admission scatter + vmapped superstep,
+        slot table donated) followed by one device->host sync; legacy mode
+        is one dispatch per admitted query plus the round, with an extra
+        liveness readback up front.
+        """
         t0 = time.perf_counter()
-        # admission (paper: fetch as many queries as capacity permits)
+        # admission (paper: fetch as many queries as capacity permits);
+        # slot choice happens host-side in both modes.
         free = self._free_slots()
-        admitted = {}
+        admitted: dict[int, Any] = {}
         while free and self._queue:
             slot = free.pop()
             qid, q = self._queue.pop(0)
-            self._slots = self._admit(self._slots, slot, q)
-            admitted[slot] = qid
+            admitted[slot] = q
             self._slot_qid[slot] = qid
-        if not np.asarray(self._slots["live"]).any():
-            return []
-        self._slots = self._super_round(self._slots)
+            self._live_mask[slot] = True
+        if self.legacy:
+            for slot, q in admitted.items():
+                self._slots = self._admit(self._slots, slot, q)
+            if not np.asarray(self._slots["live"]).any():
+                return []
+            self._slots = self._super_round(self._slots)
+        else:
+            if not self._live_mask.any():
+                return []
+            if admitted:
+                C = self.capacity
+                admit_mask = np.zeros((C,), bool)
+                by_slot = [self._proto_q_np] * C
+                for slot, q in admitted.items():
+                    admit_mask[slot] = True
+                    by_slot[slot] = q
+                queries = jax.tree.map(lambda *xs: np.stack(xs), *by_slot)
+                self._slots = self._round_admit(self._slots, admit_mask, queries)
+            else:
+                self._slots = self._round(self._slots)
         # THE barrier: one device->host sync per super-round
         done = np.asarray(self._slots["done"])
         steps = np.asarray(self._slots["step"])
+        self._live_mask &= ~done
+        t_done = time.perf_counter()
         out = []
-        for slot in np.nonzero(done)[0]:
+        done_slots = np.nonzero(done)[0]
+        all_res = None
+        if done_slots.size and not self.legacy:
+            # one vmapped dispatch extracts every slot; slice rows host-side
+            all_res = jax.tree.map(np.asarray, self._extract_all(self._slots))
+        for slot in done_slots:
             qid = self._slot_qid[int(slot)]
-            res = jax.tree.map(np.asarray, self._extract(self._slots, int(slot)))
+            if all_res is not None:
+                res = jax.tree.map(lambda tab: tab[int(slot)], all_res)
+            else:
+                res = jax.tree.map(
+                    np.asarray, self._extract(self._slots, int(slot))
+                )
             self._results[qid] = res
             self.stats.queries_done += 1
             self.stats.supersteps_total += int(steps[slot])
+            sub = self._submit_t.pop(qid, None)
+            if sub is not None:
+                self.stats.query_latencies.append(t_done - sub)
             out.append((qid, res))
         self.stats.super_rounds += 1
         self.stats.barriers += 1
@@ -262,7 +395,7 @@ class QuegelEngine:
     def run_until_drained(self, max_rounds: int = 100_000) -> dict[int, Any]:
         """Batch-querying mode (paper scenario ii)."""
         rounds = 0
-        while (self._queue or np.asarray(self._slots["live"]).any()) and rounds < max_rounds:
+        while (self._queue or self._any_live()) and rounds < max_rounds:
             self.run_round()
             rounds += 1
         return dict(self._results)

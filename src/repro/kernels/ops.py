@@ -28,8 +28,15 @@ def propagate(
     interpret: bool = True,
 ) -> jnp.ndarray:
     """One superstep of combined message propagation. x: (..., V)."""
-    if backend == "coo" or blocks is None:
+    if backend == "coo":
         return ref.propagate_coo(graph, sr, x, frontier_mask)
+    if blocks is None:
+        # A silent COO fallback here would invalidate any backend A/B
+        # comparison (the benchmark harness relies on this being honest).
+        raise ValueError(
+            f"backend '{backend}' needs a block-sparse adjacency: build one "
+            "with Graph.to_blocks(block, sr.add_id) and pass blocks="
+        )
     add_id = jnp.asarray(sr.add_id, x.dtype)
     if frontier_mask is not None:
         x = jnp.where(frontier_mask, x, add_id)

@@ -14,21 +14,20 @@ import jax
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    try:
-        return jax.make_mesh(
-            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-        )
-    except TypeError:  # older jax without axis_types kwarg
-        return jax.make_mesh(shape, axes)
+    return make_mesh(shape, axes)
 
 
 def make_mesh(shape: tuple, axes: tuple):
-    """Arbitrary mesh (tests, elastic scaling)."""
+    """Arbitrary mesh (tests, elastic scaling).
+
+    ``axis_types`` only exists on newer jax (and ``jax.sharding.AxisType``
+    raises AttributeError, not just TypeError, where absent) — fall back
+    to the plain constructor on either."""
     try:
         return jax.make_mesh(
             shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
         )
-    except TypeError:
+    except (TypeError, AttributeError):
         return jax.make_mesh(shape, axes)
 
 

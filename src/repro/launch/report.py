@@ -1,6 +1,8 @@
-"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from runs/dryrun/*.json.
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from runs/dryrun/*.json,
+and the engine hot-path tables from BENCH_quegel.json (DESIGN.md §7).
 
 Usage: PYTHONPATH=src python -m repro.launch.report [--dir runs/dryrun]
+       PYTHONPATH=src python -m repro.launch.report --bench BENCH_quegel.json
 """
 from __future__ import annotations
 
@@ -89,10 +91,53 @@ def dryrun_table(cells) -> str:
     return "\n".join(rows)
 
 
+def bench_tables(path: str) -> str:
+    """Markdown tables from the hot-path benchmark JSON (DESIGN.md §7)."""
+    with open(path) as f:
+        bench = json.load(f)
+    lines = [
+        f"## Engine hot path ({bench['meta']['backend']}, "
+        f"jax {bench['meta']['jax']}"
+        + (", quick)" if bench["meta"].get("quick") else ")"),
+        "",
+        "| workload | backend | C | rounds/s | queries/s | p50 lat | p95 lat | barriers |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for wl, backends in bench.get("workloads", {}).items():
+        for be, cells in backends.items():
+            for cname, m in cells.items():
+                # cell keys are "C<capacity>" or "C<capacity>_<variant>"
+                cap, _, variant = cname.removeprefix("C").partition("_")
+                cap = f"{cap} ({variant})" if variant else cap
+                lines.append(
+                    f"| {wl} | {be} | {cap} | "
+                    f"{m['super_rounds_per_sec']:.1f} | "
+                    f"{m['queries_per_sec']:.1f} | "
+                    f"{fmt_s(m['p50_query_latency_s'])} | "
+                    f"{fmt_s(m['p95_query_latency_s'])} | {m['barriers']} |"
+                )
+    ab = bench.get("ab")
+    if ab:
+        lines += [
+            "",
+            f"**A/B ({ab['workload']}):** fused "
+            f"{ab['fused']['super_rounds_per_sec']:.1f} rounds/s vs legacy "
+            f"{ab['legacy']['super_rounds_per_sec']:.1f} rounds/s — "
+            f"**{ab['speedup_super_rounds_per_sec']:.2f}x** super-rounds/sec "
+            f"({ab['speedup_queries_per_sec']:.2f}x queries/sec).",
+        ]
+    return "\n".join(lines)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="runs/dryrun")
+    ap.add_argument("--bench", default=None,
+                    help="path to BENCH_quegel.json; renders hot-path tables")
     args = ap.parse_args()
+    if args.bench:
+        print(bench_tables(args.bench))
+        return
     cells = load(args.dir)
     n_ok = sum(1 for c in cells if c.get("status") == "compiled")
     n_skip = sum(1 for c in cells if c.get("status") == "skipped")

@@ -90,7 +90,10 @@ def test_sharded_propagate_matches_reference():
         [os.path.join(os.path.dirname(__file__), "..", "src")]
         + env.get("PYTHONPATH", "").split(os.pathsep)
     )
-    env.pop("JAX_PLATFORMS", None)
+    # pin the platform: without it jax probes for TPU/GPU plugins, which
+    # can stall for minutes in this container; the forced host device
+    # count works fine under an explicit cpu platform.
+    env["JAX_PLATFORMS"] = "cpu"
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                        text=True, env=env, timeout=420)
     assert r.returncode == 0, r.stderr[-3000:]

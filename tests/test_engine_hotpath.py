@@ -1,0 +1,149 @@
+"""Hot-path overhaul invariants (DESIGN.md §3): the fused round (batched
+admission + donation + single-sync) must be observationally identical to
+the preserved pre-overhaul ``legacy=True`` round structure — same
+qid -> result maps, same EngineStats — including admission mid-stream
+while other slots are live."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps.ppsp import make_bfs_engine, make_bibfs_engine
+from repro.apps.hub2 import build_hub_index, make_hub2_engine
+
+
+def _pairs(graph, n_pairs, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        (int(a), int(b))
+        for a, b in rng.integers(0, graph.n_real, (n_pairs, 2))
+    ]
+
+
+def _stat_tuple(eng):
+    s = eng.stats
+    return (s.super_rounds, s.barriers, s.queries_done, s.supersteps_total)
+
+
+def _res_map(res):
+    return {
+        qid: {k: np.asarray(v).tolist() for k, v in r.items()}
+        for qid, r in res.items()
+    }
+
+
+@pytest.mark.parametrize("capacity", [1, 3, 8])
+def test_fused_matches_legacy_batch(small_directed, capacity):
+    g = small_directed
+    pairs = _pairs(g, 14, seed=capacity)
+    engines = {
+        mode: make_bfs_engine(g, capacity=capacity, legacy=(mode == "legacy"))
+        for mode in ("fused", "legacy")
+    }
+    out = {}
+    for mode, eng in engines.items():
+        for p in pairs:
+            eng.submit(jnp.asarray(p, jnp.int32))
+        out[mode] = _res_map(eng.run_until_drained())
+    assert out["fused"] == out["legacy"]
+    assert _stat_tuple(engines["fused"]) == _stat_tuple(engines["legacy"])
+
+
+def test_fused_matches_legacy_midstream(small_directed):
+    """Admission while other slots are live: submit in three waves, with
+    super-rounds in between, so new queries join slots mid-flight at
+    different superstep numbers (paper Fig. 2)."""
+    g = small_directed
+    waves = [_pairs(g, 3, seed=s) for s in (21, 22, 23)]
+    out, stats = {}, {}
+    for mode in ("fused", "legacy"):
+        eng = make_bfs_engine(g, capacity=4, legacy=(mode == "legacy"))
+        qids = []
+        for wave in waves:
+            qids += [eng.submit(jnp.asarray(p, jnp.int32)) for p in wave]
+            eng.run_round()
+            eng.run_round()
+        res = eng.run_until_drained()
+        assert set(res) == set(qids)
+        out[mode] = _res_map(res)
+        stats[mode] = _stat_tuple(eng)
+    assert out["fused"] == out["legacy"]
+    assert stats["fused"] == stats["legacy"]
+
+
+def test_fused_matches_legacy_bibfs_aux_view(small_directed):
+    """Programs with auxiliary (reverse) propagation views take the same
+    fused path; results and stats must still match."""
+    g = small_directed
+    pairs = _pairs(g, 10, seed=31)
+    out, stats = {}, {}
+    for mode in ("fused", "legacy"):
+        eng = make_bibfs_engine(g, capacity=4, legacy=(mode == "legacy"))
+        for p in pairs:
+            eng.submit(jnp.asarray(p, jnp.int32))
+        out[mode] = _res_map(eng.run_until_drained())
+        stats[mode] = _stat_tuple(eng)
+    assert out["fused"] == out["legacy"]
+    assert stats["fused"] == stats["legacy"]
+
+
+def test_fused_matches_legacy_with_index(small_undirected):
+    """Index-carrying programs (Hub²) vmap their init over admissions."""
+    g = small_undirected
+    idx = build_hub_index(g, k=4, capacity=4)
+    pairs = _pairs(g, 8, seed=41)
+    out = {}
+    for mode in ("fused", "legacy"):
+        eng = make_hub2_engine(g, idx, capacity=4, legacy=(mode == "legacy"))
+        for p in pairs:
+            eng.submit(jnp.asarray(p, jnp.int32))
+        out[mode] = _res_map(eng.run_until_drained())
+    assert out["fused"] == out["legacy"]
+
+
+def test_donation_flag_is_equivalent(small_directed):
+    """donate=True (accelerator default) vs donate=False (CPU default)
+    must be invisible to results; donated buffers may not be reused."""
+    g = small_directed
+    pairs = _pairs(g, 8, seed=51)
+    out = {}
+    for donate in (True, False):
+        eng = make_bfs_engine(g, capacity=4, donate=donate)
+        for p in pairs:
+            eng.submit(jnp.asarray(p, jnp.int32))
+        out[donate] = _res_map(eng.run_until_drained())
+    assert out[True] == out[False]
+
+
+def test_query_latencies_recorded(small_directed):
+    g = small_directed
+    eng = make_bfs_engine(g, capacity=4)
+    for p in _pairs(g, 6, seed=61):
+        eng.submit(jnp.asarray(p, jnp.int32))
+    eng.run_until_drained()
+    assert len(eng.stats.query_latencies) == 6
+    assert all(t >= 0 for t in eng.stats.query_latencies)
+    assert eng.stats.latency_percentile(50) <= eng.stats.latency_percentile(95)
+
+
+def test_single_sync_no_live_readback(small_directed, monkeypatch):
+    """The fused path must not read slot liveness back from the device:
+    admission is served by the host mirror (the collapsed pre-round sync
+    of the overhaul)."""
+    g = small_directed
+    eng = make_bfs_engine(g, capacity=2)
+    reads = []
+    orig = np.asarray
+
+    def spy(x, *a, **kw):
+        if x is eng._slots.get("live"):
+            reads.append(1)
+        return orig(x, *a, **kw)
+
+    for p in _pairs(g, 5, seed=71):
+        eng.submit(jnp.asarray(p, jnp.int32))
+    monkeypatch.setattr(np, "asarray", spy)
+    try:
+        eng.run_until_drained()
+    finally:
+        monkeypatch.undo()
+    assert not reads, "fused engine read live flags from the device"

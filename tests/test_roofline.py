@@ -97,7 +97,9 @@ def test_dryrun_machinery_reduced_mesh():
     env["PYTHONPATH"] = os.pathsep.join(
         [os.path.join(os.path.dirname(__file__), "..", "src")]
         + env.get("PYTHONPATH", "").split(os.pathsep))
-    env.pop("JAX_PLATFORMS", None)
+    # pin the platform: without it jax probes for TPU/GPU plugins, which
+    # can stall for minutes in this container (see test_distributed.py)
+    env["JAX_PLATFORMS"] = "cpu"
     r = subprocess.run([sys.executable, "-c", DRYRUN_SCRIPT], capture_output=True,
                        text=True, env=env, timeout=540)
     assert r.returncode == 0, r.stderr[-3000:]
