@@ -277,6 +277,24 @@ def table12_keyword(quick=False):
         eng._results.clear()
 
 
+def _merge_bench_json(update: dict, path: str = "BENCH_quegel.json"):
+    """Update top-level keys of the committed bench JSON in place, so
+    ``--only sparsity`` and ``--only hotpath`` each land without clobbering
+    the other table's numbers."""
+    data = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            data = {}
+    data.update(update)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2)
+    print(f"# wrote {path}")
+    return data
+
+
 # ------------------------------------------------------- hot-path bench
 def _reset_stats(eng):
     from repro.core.engine import EngineStats
@@ -468,10 +486,128 @@ def bench_hotpath(quick=False):
     emit("hotpath", "ab_fused_rounds_per_s", cell_fused["super_rounds_per_sec"])
     emit("hotpath", "ab_speedup_rounds_per_s", speedup)
 
-    with open("BENCH_quegel.json", "w") as f:
-        json.dump(out, f, indent=2)
+    _merge_bench_json(out)
     RESULTS.setdefault("hotpath", {})["json"] = out
-    print("# wrote BENCH_quegel.json")
+
+
+# ----------------------------------------------------------- sparsity
+def _time_median(fn, *args, reps=20):
+    fn(*args).block_until_ready()  # compile + warm
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn(*args).block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def bench_sparsity(quick=False):
+    """Sparsity-aware propagation (DESIGN.md §3/§7).
+
+    Two sub-tables, merged into ``BENCH_quegel.json`` under ``sparsity``:
+
+    * ``propagation`` — dense-vs-gated A/B per backend on a low-frontier
+      workload (PPSP superstep-1: one active vertex per query, C=8).
+      Dense applies the frontier as a full pre-mask of x and visits every
+      tile / reduces over every edge; gated skips frontier-dead tiles
+      (active-block bitmaps) resp. gathers only active edges (coo).
+    * ``rounds`` — multi-superstep fused rounds on the PPSP engine:
+      barriers/query and throughput at steps_per_round k ∈ {1, 4, 8},
+      with qid→result maps checked identical across k.  Run on a mesh
+      (terrain-like) graph whose diameter gives queries dozens of
+      supersteps — the regime where amortizing the per-superstep dispatch
+      + sync pays (a power-law graph's ~4-superstep BFS caps the
+      reduction at ~4× regardless of k).
+    """
+    import jax
+
+    from repro.apps.ppsp import make_bfs_engine
+    from repro.core.graph import barabasi_albert, grid_terrain
+    from repro.core.semiring import INF, MIN_RIGHT
+    from repro.kernels import ops
+
+    out: dict = {
+        "meta": {
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "quick": bool(quick),
+        },
+        "propagation": {},
+        "rounds": {},
+    }
+
+    # ---------------- propagation-level dense-vs-gated A/B ---------------
+    g = barabasi_albert(512 if quick else 2048, 3, seed=21)
+    C = 8
+    rng = np.random.default_rng(22)
+    srcs = rng.choice(g.n_real, C, replace=False)
+    dist = np.full((C, g.n), INF, np.int32)
+    dist[np.arange(C), srcs] = 0
+    x = jnp.asarray(dist)
+    f = jnp.asarray(dist == 0)  # superstep-1 frontier: 1 vertex per query
+    bs = g.to_blocks(128, MIN_RIGHT.add_id)
+    chunk = 512
+    emit("sparsity", "frontier_density", 1.0 / g.n)
+    emit("sparsity", "edges", g.num_edges)
+    for be in ("coo", "blocks_ref", "pallas"):
+        blk = None if be == "coo" else bs
+        reps = 5 if be == "pallas" else (15 if quick else 30)
+
+        def dense(x, f, be=be, blk=blk):
+            return ops.propagate(
+                g, MIN_RIGHT, x, f, blocks=blk, backend=be, gate=False
+            )
+
+        def gated(x, f, be=be, blk=blk):
+            return ops.propagate(
+                g, MIN_RIGHT, x, f, blocks=blk, backend=be, gate=True,
+                gather_edges=chunk if be == "coo" else None,
+            )
+
+        t_dense = _time_median(jax.jit(dense), x, f, reps=reps)
+        t_gated = _time_median(jax.jit(gated), x, f, reps=reps)
+        # parity on the measured inputs — a wrong fast path is worthless
+        np.testing.assert_array_equal(
+            np.asarray(gated(x, f)), np.asarray(dense(x, f))
+        )
+        cell = dict(
+            dense_s=t_dense,
+            gated_s=t_gated,
+            speedup=t_dense / t_gated,
+        )
+        out["propagation"][be] = cell
+        emit("sparsity", f"{be}_dense_us", t_dense * 1e6)
+        emit("sparsity", f"{be}_gated_us", t_gated * 1e6)
+        emit("sparsity", f"{be}_speedup", cell["speedup"])
+
+    # ---------------- multi-superstep fused rounds -----------------------
+    g2, _ = grid_terrain(12 if quick else 24, 15 if quick else 30, seed=7)
+    pairs = _pairs(g2.n_real, 24 if quick else 64, seed=8)
+    qs = [jnp.asarray(p, jnp.int32) for p in pairs]
+    base_map = None
+    for k in (1, 4, 8):
+        eng = make_bfs_engine(g2, capacity=8, steps_per_round=k)
+        _warm(eng, qs[: max(2, min(4, len(qs)))])
+        m, res = _measure_drain(eng, qs)
+        eng._results.clear()
+        res_map = {
+            qid: {kk: np.asarray(v).tolist() for kk, v in r.items()}
+            for qid, r in res.items()
+        }
+        if base_map is None:
+            base_map = res_map
+        m["results_match_k1"] = res_map == base_map
+        assert m["results_match_k1"], f"steps_per_round={k} changed results"
+        out["rounds"][f"k{k}"] = m
+        emit("sparsity", f"k{k}_barriers", m["barriers"])
+        emit("sparsity", f"k{k}_rounds_per_s", m["super_rounds_per_sec"])
+        emit("sparsity", f"k{k}_qps", m["queries_per_sec"])
+    red = out["rounds"]["k1"]["barriers"] / out["rounds"]["k8"]["barriers"]
+    out["barrier_reduction_k8"] = red
+    emit("sparsity", "barrier_reduction_k8", red)
+
+    _merge_bench_json({"sparsity": out})
+    RESULTS.setdefault("sparsity", {})["json"] = out
 
 
 # ----------------------------------------------------------- kernel bench
@@ -508,6 +644,7 @@ def bench_kernels(quick=False):
 
 TABLES = {
     "hotpath": bench_hotpath,
+    "sparsity": bench_sparsity,
     "table2": table2_interactive,
     "table3": table3_bfs_vs_bibfs,
     "table5": table5_hub2,
@@ -526,6 +663,11 @@ def main() -> int:
     ap.add_argument("--only", default=None)
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out", default="runs/bench")
+    ap.add_argument(
+        "--assert-floor", type=float, default=None, metavar="X",
+        help="regression gate: fail unless BENCH_quegel.json reports "
+        "ab.speedup_super_rounds_per_sec >= X (run after --only hotpath)",
+    )
     args = ap.parse_args()
     names = [args.only] if args.only else list(TABLES)
     for name in names:
@@ -536,6 +678,18 @@ def main() -> int:
     os.makedirs(args.out, exist_ok=True)
     with open(os.path.join(args.out, "results.json"), "w") as f:
         json.dump(RESULTS, f, indent=2)
+    if args.assert_floor is not None:
+        if "hotpath" not in names:
+            print("# --assert-floor requires the hotpath table in this run")
+            return 1
+        speedup = RESULTS["hotpath"]["json"]["ab"]["speedup_super_rounds_per_sec"]
+        if speedup < args.assert_floor:
+            print(
+                f"# REGRESSION: fused-vs-legacy speedup {speedup:.3f} "
+                f"< floor {args.assert_floor}"
+            )
+            return 1
+        print(f"# floor OK: {speedup:.3f} >= {args.assert_floor}")
     return 0
 
 

@@ -97,21 +97,35 @@ class HubLabelBFS(VertexProgram):
     def extract(self, state, query):
         return dict(dist=state["dist"], pre=state["pre"])
 
+    def frontier_of(self, state):
+        return state["frontier"]
 
-def build_hub_index(graph: Graph, k: int, capacity: int = 8, backend: str = "coo") -> HubIndex:
-    """Run the |H| BFS queries through the engine and assemble the labels."""
-    if backend != "coo":
-        # HubLabelBFS mixes min_right and max_right on the same view; one
-        # tile table can only encode one add-identity (DESIGN.md §2).
-        raise ValueError("build_hub_index supports only the coo backend")
+
+def build_hub_index(graph: Graph, k: int, capacity: int = 8, backend: str = "coo",
+                    block: int = 128, **kw) -> HubIndex:
+    """Run the |H| BFS queries through the engine and assemble the labels.
+
+    HubLabelBFS mixes min_right (distance) and max_right (pre-flag) on the
+    SAME view, and one tile table encodes exactly one add-identity
+    (DESIGN.md §2) — so tile backends get a per-semiring ``BlockSparse``
+    table (``{sr.name: tiles}``), resolved per propagate call.  The coo
+    default needs no tiles.
+    """
+    from repro.apps.ppsp import blocks_table
+
     hubs = pick_hubs(graph, k)
     is_hub = jnp.zeros((graph.n,), bool).at[jnp.asarray(hubs)].set(True)
+    if "blocks" not in kw:
+        kw["blocks"] = blocks_table(
+            graph, (MIN_RIGHT, MAX_RIGHT), dict(kw, backend=backend), block
+        )
     eng = QuegelEngine(
         graph,
         HubLabelBFS(is_hub),
         capacity,
         backend=backend,
         example_query=jnp.zeros((1,), jnp.int32),
+        **kw,
     )
     qids = [eng.submit(jnp.asarray([h], jnp.int32)) for h in hubs]
     res = eng.run_until_drained()
@@ -188,6 +202,9 @@ class Hub2PPSP(VertexProgram):
         return dict(
             dist=jnp.minimum(state["d_ub"], state["bibest"]), visited=visited
         )
+
+    def frontier_of(self, state):
+        return dict(ff=state["ff"], fb=state["fb"])
 
 
 def make_hub2_engine(graph: Graph, index: HubIndex, capacity: int = 8, *,

@@ -79,6 +79,9 @@ class GraphKeywordSearch(VertexProgram):
         done = (ctx.step >= self.delta_max) | ~improved.any()
         return dict(enc=enc, frontier=improved), done
 
+    def frontier_of(self, state):
+        return state["frontier"]
+
     def extract(self, state, query):
         enc = state["enc"]  # (MAXK, V)
         used = (query >= 0)[:, None]

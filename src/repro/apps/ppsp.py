@@ -43,6 +43,9 @@ class BFSProgram(VertexProgram):
         visited = (state["dist"] < INF).sum()
         return dict(dist=state["dist"][t], visited=visited)
 
+    def frontier_of(self, state):
+        return state["frontier"]
+
 
 class BiBFSProgram(VertexProgram):
     """Bidirectional BFS (paper §5.1.1): forward from s on G, backward from
@@ -80,6 +83,9 @@ class BiBFSProgram(VertexProgram):
         visited = ((state["ds"] < INF) | (state["dt"] < INF)).sum()
         return dict(dist=jnp.minimum(state["best"], INF), visited=visited)
 
+    def frontier_of(self, state):
+        return dict(ff=state["ff"], fb=state["fb"])
+
 
 def blocks_for(graph: Graph, add_id, kw: dict, block: int = 128):
     """Auto-build the block-sparse adjacency when a tile backend is chosen.
@@ -93,6 +99,16 @@ def blocks_for(graph: Graph, add_id, kw: dict, block: int = 128):
     if kw.get("backend", "coo") == "coo":
         return None
     return graph.to_blocks(block, add_id)
+
+
+def blocks_table(graph: Graph, semirings, kw: dict, block: int = 128):
+    """Per-semiring BlockSparse dict for programs that mix semirings on
+    one view (a tile table encodes exactly one add-identity, DESIGN.md
+    §2): ``{sr.name: tiles}``, resolved per propagate call by
+    ``kernels.ops``.  None for the coo backend, like :func:`blocks_for`."""
+    if kw.get("backend", "coo") == "coo":
+        return None
+    return {sr.name: graph.to_blocks(block, sr.add_id) for sr in semirings}
 
 
 def make_bibfs_engine(graph: Graph, capacity: int = 8, *, block: int = 128, **kw):

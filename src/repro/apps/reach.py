@@ -284,6 +284,9 @@ class ReachQuery(VertexProgram):
         done = reach | (~ff.any() & ~fb.any())
         return dict(ds=ds, dt=dt, ff=ff, fb=fb, reach=reach), done
 
+    def frontier_of(self, state):
+        return dict(ff=state["ff"], fb=state["fb"])
+
     def extract(self, state, query):
         visited = ((state["ds"] < INF) | (state["dt"] < INF)).sum()
         return dict(reach=state["reach"], visited=visited)

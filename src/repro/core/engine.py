@@ -14,8 +14,12 @@ place instead of copying them; admission of up to C queued queries is one
 batched scatter (``vmap``-ed ``init`` + ``.at[slots].set(mode='drop')``)
 inside the same dispatch; and slot liveness is mirrored host-side so a
 round performs exactly ONE device->host sync (the ``done``/``step``
-readback).  The pre-refactor path (per-query admission dispatches, live
-readback before every round, undonated copies) is preserved under
+readback).  With ``steps_per_round=k`` the round runs up to k supersteps
+in a ``lax.while_loop`` (all-live-slots-done early exit), so that one
+sync amortizes over k supersteps; propagation itself is sparsity-gated
+(``gate``/``gather_edges``, DESIGN.md §3) so superstep cost tracks the
+active frontier.  The pre-refactor path (per-query admission dispatches,
+live readback before every round, undonated copies) is preserved under
 ``legacy=True`` as the benchmark baseline.
 
 Data taxonomy (paper §3.2) maps as:
@@ -74,6 +78,13 @@ class VertexProgram:
                                        for one query; vectorized over V.
     ``extract(state, query)``       -> small result pytree (reported to the
                                        console / dumped, paper's last round).
+    ``frontier_of(state)``          -> optional pytree of (V,) bool masks:
+                                       the vertices this query will activate
+                                       next superstep.  Exposing it lets the
+                                       engine report per-round frontier
+                                       occupancy (``track_frontier=True``)
+                                       and is what sparsity gating reasons
+                                       about (DESIGN.md §3).
     """
 
     def init(self, graph: Graph, query, index=None):
@@ -85,6 +96,9 @@ class VertexProgram:
     def extract(self, state, query):
         raise NotImplementedError
 
+    def frontier_of(self, state):
+        return None
+
 
 @dataclasses.dataclass
 class EngineStats:
@@ -95,6 +109,9 @@ class EngineStats:
     round_times: list = dataclasses.field(default_factory=list)
     # per-query submit->result latency, appended at completion (bench: p50/p95)
     query_latencies: list = dataclasses.field(default_factory=list)
+    # per-round active frontier vertex count, only when track_frontier=True
+    # (costs one extra readback per round — diagnostics, not the hot path)
+    frontier_active: list = dataclasses.field(default_factory=list)
 
     @property
     def wall_time(self) -> float:
@@ -121,6 +138,22 @@ class QuegelEngine:
                 off for CPU where donated calls skip jit's C++ fast path
                 and the dispatch penalty exceeds the copy saved
                 (DESIGN.md §3).
+    steps_per_round : run up to k supersteps inside ONE jitted round via a
+                ``lax.while_loop`` with an all-live-slots-done early exit,
+                amortizing dispatch + the device->host sync ~k× (the
+                barrier invariant becomes "one barrier per k supersteps",
+                DESIGN.md §3).  Per-slot superstep accounting stays exact;
+                admission still happens at round boundaries only.
+    gate      : sparsity gating (DESIGN.md §3): tile backends skip
+                frontier-dead adjacency tiles instead of pre-masking x
+                densely.  ``gate=False`` is the dense A/B baseline.
+    gather_edges : when set (coo backend), frontier-carrying propagation
+                reduces over padded chunks of this many ACTIVE edges
+                instead of all E — for workloads whose frontiers are known
+                to stay small (paper's light-workload regime).
+    track_frontier : record per-round active frontier counts in
+                ``EngineStats.frontier_active`` (extra readback; off the
+                hot path) — requires the program to define ``frontier_of``.
     """
 
     def __init__(
@@ -131,13 +164,17 @@ class QuegelEngine:
         *,
         index: Any = None,
         backend: str = "coo",
-        blocks: Optional[BlockSparse] = None,
+        blocks: Optional[Any] = None,
         aux_graphs: Optional[dict] = None,
         interpret: bool = True,
         example_query: Any = None,
         propagate_override: Optional[dict] = None,
         legacy: bool = False,
         donate: Any = "auto",
+        steps_per_round: int = 1,
+        gate: bool = True,
+        gather_edges: Optional[int] = None,
+        track_frontier: bool = False,
     ):
         """``propagate_override`` maps a view name ('default', 'rev', ...)
         to a callable (semiring, x, frontier) -> y, e.g. the shard_map
@@ -155,6 +192,14 @@ class QuegelEngine:
         self.propagate_override = dict(propagate_override or {})
         self.interpret = interpret
         self.legacy = bool(legacy)
+        self.steps_per_round = int(steps_per_round)
+        if self.steps_per_round < 1:
+            raise ValueError("steps_per_round must be >= 1")
+        if self.legacy and self.steps_per_round != 1:
+            raise ValueError("legacy mode predates multi-superstep rounds")
+        self.gate = bool(gate)
+        self.gather_edges = gather_edges
+        self.track_frontier = bool(track_frontier)
         if donate == "auto":
             donate = jax.default_backend() not in ("cpu",)
         self.donate = bool(donate)
@@ -187,6 +232,8 @@ class QuegelEngine:
             blocks=b,
             backend=self.backend,
             interpret=self.interpret,
+            gate=self.gate,
+            gather_edges=self.gather_edges,
         )
 
     def _build(self, example_query):
@@ -241,6 +288,11 @@ class QuegelEngine:
             return slots
 
         def super_round(slots):
+            """ONE superstep for every live slot.  ``done`` ACCUMULATES
+            (a slot finishing at superstep j of a multi-step round must
+            still read True at the round's single readback); callers zero
+            it at round entry via ``zero_done``."""
+
             def one(state, query, step, live):
                 ctx = StepCtx(
                     graph=g,
@@ -262,8 +314,34 @@ class QuegelEngine:
                 query=slots["query"],
                 step=slots["step"] + live.astype(jnp.int32),
                 live=live & ~done,
-                done=done,
+                done=slots["done"] | done,
             )
+
+        def zero_done(slots):
+            return dict(slots, done=jnp.zeros_like(slots["done"]))
+
+        spr = self.steps_per_round
+
+        def round_k(slots):
+            """Up to ``spr`` supersteps in ONE dispatch, early-exiting as
+            soon as every live slot has voted done — barrier count drops
+            ~spr× while per-slot ``step`` counters stay exact."""
+            slots = zero_done(slots)
+            if spr == 1:
+                return super_round(slots)
+
+            def cond(carry):
+                s, it = carry
+                return (it < spr) & s["live"].any()
+
+            def body(carry):
+                s, it = carry
+                return super_round(s), it + 1
+
+            slots, _ = jax.lax.while_loop(
+                cond, body, (slots, jnp.asarray(0, jnp.int32))
+            )
+            return slots
 
         def extract(slots, idx):
             st = jax.tree.map(lambda tab: tab[idx], slots["state"])
@@ -273,14 +351,14 @@ class QuegelEngine:
         self._extract = jax.jit(extract)
         if self.legacy:
             self._admit = jax.jit(admit)
-            self._super_round = jax.jit(super_round)
+            self._super_round = jax.jit(lambda s: super_round(zero_done(s)))
         else:
             # Donating the slot table lets XLA alias every (C, V, ...) slab
             # output to its input: the hot loop mutates in place, no copy.
             dn = (0,) if self.donate else ()
-            self._round = jax.jit(super_round, donate_argnums=dn)
+            self._round = jax.jit(round_k, donate_argnums=dn)
             self._round_admit = jax.jit(
-                lambda slots, admit_mask, queries: super_round(
+                lambda slots, admit_mask, queries: round_k(
                     admit_batch(slots, admit_mask, queries)
                 ),
                 donate_argnums=dn,
@@ -292,6 +370,23 @@ class QuegelEngine:
             # one dispatch extracts every slot; run_round slices the rows
             # of finished queries host-side (results are small Q-data).
             self._extract_all = jax.jit(extract_all)
+
+        # per-round frontier occupancy (opt-in diagnostics): live slots'
+        # active-vertex count, summed over the program's frontier leaves.
+        self._frontier_count = None
+        if self.track_frontier and prog.frontier_of(proto_state) is not None:
+
+            def frontier_count(slots):
+                def one(state, live):
+                    tot = sum(
+                        jnp.sum(leaf)
+                        for leaf in jax.tree.leaves(prog.frontier_of(state))
+                    )
+                    return jnp.where(live, tot, 0)
+
+                return jax.vmap(one)(slots["state"], slots["live"]).sum()
+
+            self._frontier_count = jax.jit(frontier_count)
 
     # -------------------------------------------------------------- client
     def submit(self, query) -> int:
@@ -389,6 +484,8 @@ class QuegelEngine:
             out.append((qid, res))
         self.stats.super_rounds += 1
         self.stats.barriers += 1
+        if self._frontier_count is not None:
+            self.stats.frontier_active.append(int(self._frontier_count(self._slots)))
         self.stats.round_times.append(time.perf_counter() - t0)
         return out
 

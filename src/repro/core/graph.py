@@ -44,6 +44,10 @@ class BlockSparse:
     src_ids: jnp.ndarray  # (nb, max_bpr) int32
     tiles: jnp.ndarray  # (nb, max_bpr, B, B) weight dtype
     block: int = dataclasses.field(metadata=dict(static=True))
+    # (nb,) int32 — number of REAL source blocks per destination-block row;
+    # slots >= nslots[i] are padding (identity tiles) and may be skipped by
+    # the gated kernels.  None on tables built before gating existed.
+    nslots: Optional[jnp.ndarray] = None
 
     @property
     def num_dst_blocks(self) -> int:
@@ -71,6 +75,14 @@ class Graph:
     w: jnp.ndarray  # (E,) int32 or float32 edge weights
     in_deg: jnp.ndarray  # (n,) int32
     out_deg: jnp.ndarray  # (n,) int32
+    # CSR (sorted-by-source) view of the same edges, driving the
+    # frontier-gated COO path: ``csr_row[v]:csr_row[v+1]`` indexes the
+    # out-edges of v in csr_src/csr_dst/csr_w.  None on graphs built by
+    # hand before gating existed (gated propagation then refuses).
+    csr_row: Optional[jnp.ndarray] = None  # (n+1,) int32
+    csr_src: Optional[jnp.ndarray] = None  # (E,) int32, sorted
+    csr_dst: Optional[jnp.ndarray] = None  # (E,) int32
+    csr_w: Optional[jnp.ndarray] = None  # (E,)
 
     @property
     def num_edges(self) -> int:
@@ -97,6 +109,9 @@ class Graph:
         n_pad = _pad_to(max(n, 1), pad_to)
         in_deg = np.bincount(dst, minlength=n_pad).astype(np.int32)
         out_deg = np.bincount(src, minlength=n_pad).astype(np.int32)
+        csr = np.argsort(src, kind="stable")
+        csr_src = src[csr]
+        csr_row = np.searchsorted(csr_src, np.arange(n_pad + 1)).astype(np.int32)
         return Graph(
             n=n_pad,
             n_real=n,
@@ -105,18 +120,21 @@ class Graph:
             w=jnp.asarray(w),
             in_deg=jnp.asarray(in_deg),
             out_deg=jnp.asarray(out_deg),
+            csr_row=jnp.asarray(csr_row),
+            csr_src=jnp.asarray(csr_src),
+            csr_dst=jnp.asarray(dst[csr]),
+            csr_w=jnp.asarray(w[csr]),
         )
 
     def reverse(self) -> "Graph":
-        order = jnp.argsort(self.src, stable=True)
-        return Graph(
-            n=self.n,
-            n_real=self.n_real,
-            src=self.dst[order],
-            dst=self.src[order],
-            w=self.w[order],
-            in_deg=self.out_deg,
-            out_deg=self.in_deg,
+        w = np.asarray(self.w)
+        return Graph.from_edges(
+            np.asarray(self.dst),
+            np.asarray(self.src),
+            self.n_real,
+            w=w,
+            pad_to=self.n,
+            weight_dtype=w.dtype,
         )
 
     def undirected(self) -> "Graph":
@@ -178,6 +196,7 @@ class Graph:
             src_ids=jnp.asarray(src_ids),
             tiles=jnp.asarray(tiles),
             block=block,
+            nslots=jnp.asarray([len(r) for r in rows], dtype=jnp.int32),
         )
 
 

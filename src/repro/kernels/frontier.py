@@ -12,7 +12,12 @@ block-sparse dense-tile "matmul" over a semiring:
 The scalar-prefetch indirection (``PrefetchScalarGridSpec``) is the TPU
 idiom replacing Quegel's hash-partitioned message routing: the block index
 list *is* the routing table, resolved at tile granularity instead of per
-message.  B is a multiple of 128 (lane width); Q is padded to 8 (sublanes).
+message.  A second scalar-prefetch operand carries the per-(dst_block,
+slot) ACTIVITY bitmap (the frontier reduced over the query axis, plus
+padding-slot validity): ``pl.when`` skips the combine and the accumulate
+of dead tiles, making tile work proportional to the active frontier
+(DESIGN.md §3).  B is a multiple of 128 (lane width); Q is padded to 8
+(sublanes).
 
 Semiring flavours (static `sr_name` at trace time):
   min_plus / max_plus : distance relaxation (saturating on int32)
@@ -53,16 +58,29 @@ def _combine_tile(sr_name: str, xs, t, add_id):
     raise ValueError(sr_name)
 
 
-def _kernel(src_ids_ref, x_ref, tiles_ref, o_ref, *, sr_name: str, add_id):
-    k = pl.program_id(1)
-    part = _combine_tile(sr_name, x_ref[...], tiles_ref[0, 0], jnp.asarray(add_id, x_ref.dtype))
+def _kernel(src_ids_ref, active_ref, x_ref, tiles_ref, *rest, sr_name: str, add_id):
+    """One (dst_block, slot) grid cell.  ``active_ref`` is the second
+    scalar-prefetch operand: a per-(i, k) activity flag (frontier-dead and
+    padding tiles are skipped — both the combine and the accumulate).  The
+    optional mask ref applies the per-lane frontier INSIDE the tile (the
+    push-down replacing the old dense pre-mask of x)."""
+    if len(rest) == 2:
+        m_ref, o_ref = rest
+    else:
+        (o_ref,) = rest
+        m_ref = None
+    i, k = pl.program_id(0), pl.program_id(1)
 
     @pl.when(k == 0)
     def _init():
-        o_ref[...] = part
+        o_ref[...] = jnp.full(o_ref.shape, add_id, o_ref.dtype)
 
-    @pl.when(k > 0)
+    @pl.when(active_ref[i, k] != 0)
     def _acc():
+        xs = x_ref[...]
+        if m_ref is not None:
+            xs = jnp.where(m_ref[...] != 0, xs, jnp.asarray(add_id, xs.dtype))
+        part = _combine_tile(sr_name, xs, tiles_ref[0, 0], jnp.asarray(add_id, xs.dtype))
         if sr_name in ("min_plus", "min_right"):
             o_ref[...] = jnp.minimum(o_ref[...], part)
         elif sr_name in ("max_plus", "max_right"):
@@ -72,12 +90,26 @@ def _kernel(src_ids_ref, x_ref, tiles_ref, o_ref, *, sr_name: str, add_id):
 
 
 @functools.partial(jax.jit, static_argnames=("sr", "interpret"))
-def propagate_blocks(bs: BlockSparse, sr: Semiring, x: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+def propagate_blocks(
+    bs: BlockSparse,
+    sr: Semiring,
+    x: jnp.ndarray,
+    mask=None,
+    active=None,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
     """Run the Pallas frontier kernel. x: (Q, V) -> (Q, V).
 
     Q is padded to a multiple of 8, V to num_dst_blocks * B.  On this CPU
     container ``interpret=True`` executes the kernel body for validation;
     on a real TPU pass interpret=False.
+
+    ``mask``   (Q, V) bool — per-lane frontier, applied per visited tile.
+    ``active`` (nb, max_bpr) bool — per-tile activity flags, scalar-
+               prefetched and gated with ``pl.when`` so dead tiles cost a
+               flag read instead of a combine + accumulate.  None visits
+               every tile (the dense baseline).
     """
     q, v = x.shape
     b = bs.block
@@ -85,20 +117,33 @@ def propagate_blocks(bs: BlockSparse, sr: Semiring, x: jnp.ndarray, *, interpret
     qp = max(8, ((q + 7) // 8) * 8)
     vp = nb * b
     xpad = jnp.pad(x, ((0, qp - q), (0, vp - v)), constant_values=sr.add_id)
+    if active is None:
+        act = jnp.ones((nb, max_bpr), jnp.int32)
+    else:
+        act = active.astype(jnp.int32)
 
     grid = (nb, max_bpr)
+    x_spec = pl.BlockSpec((qp, b), lambda i, k, ids, act: (0, ids[i, k]))
+    in_specs = [
+        x_spec,
+        pl.BlockSpec((1, 1, b, b), lambda i, k, ids, act: (i, k, 0, 0)),
+    ]
+    args = [xpad, bs.tiles.reshape(nb, max_bpr, b, b)]
+    if mask is not None:
+        mpad = jnp.pad(
+            mask.astype(jnp.int32), ((0, qp - q), (0, vp - v)), constant_values=0
+        )
+        in_specs.append(x_spec)
+        args.append(mpad)
     out = pl.pallas_call(
         functools.partial(_kernel, sr_name=sr.name, add_id=sr.add_id),
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=2,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((qp, b), lambda i, k, ids: (0, ids[i, k])),
-                pl.BlockSpec((1, 1, b, b), lambda i, k, ids: (i, k, 0, 0)),
-            ],
-            out_specs=pl.BlockSpec((qp, b), lambda i, k, ids: (0, i)),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((qp, b), lambda i, k, ids, act: (0, i)),
         ),
         out_shape=jax.ShapeDtypeStruct((qp, vp), x.dtype),
         interpret=interpret,
-    )(bs.src_ids, xpad, bs.tiles.reshape(nb, max_bpr, b, b))
+    )(bs.src_ids, act, *args)
     return out[:q, :v]

@@ -2,13 +2,23 @@
 
 ``propagate`` picks the execution path:
   * ``coo``    — segment-reduction reference (exact; the CPU-fast path the
-                 engine uses in this container),
+                 engine uses in this container), with an optional
+                 frontier-gated active-edge gather (``gather_edges``),
   * ``blocks`` — the Pallas block-sparse kernel (TPU target; interpret-mode
-                 on CPU for validation).
+                 on CPU for validation) and its jnp oracle.
+
+Sparsity gating (DESIGN.md §3): on the tile backends the frontier is NOT
+applied as a dense pre-mask of x (that costs O(C·V) per superstep and
+tells the kernel nothing).  Instead the mask is pushed into the block
+path: a per-(dst_block, slot) activity bitmap — the frontier reduced over
+the lane/slot axis, looked up per source block — lets the kernels skip
+dead tiles entirely, and the per-lane mask is applied inside the visited
+tiles only.  ``gate=False`` restores the dense pre-mask as the benchmark
+baseline.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Union
 
 import jax.numpy as jnp
 
@@ -17,18 +27,59 @@ from repro.core.semiring import Semiring
 from repro.kernels import frontier, ref
 
 
+def block_activity(bs: BlockSparse, mask) -> jnp.ndarray:
+    """(nb, max_bpr) bool — which adjacency tiles can contribute.
+
+    A tile is dead when it is a padding slot (k >= nslots[i]) or when its
+    source block holds no active vertex in ANY lane (``mask`` reduced over
+    every leading axis — the slot axis C in engine use).  ``mask=None``
+    still gates padding slots.
+    """
+    nb, b, m = bs.num_dst_blocks, bs.block, bs.max_bpr
+    if bs.nslots is not None:
+        valid = jnp.arange(m, dtype=jnp.int32)[None, :] < bs.nslots[:, None]
+    else:
+        valid = jnp.ones((nb, m), bool)
+    if mask is None:
+        return valid
+    f = mask.any(axis=tuple(range(mask.ndim - 1)))  # (V,)
+    f = jnp.pad(f, (0, nb * b - f.shape[0]))
+    return valid & f.reshape(nb, b).any(-1)[bs.src_ids]
+
+
 def propagate(
     graph: Graph,
     sr: Semiring,
     x: jnp.ndarray,
     frontier_mask: Optional[jnp.ndarray] = None,
     *,
-    blocks: Optional[BlockSparse] = None,
+    blocks: Optional[Union[BlockSparse, dict]] = None,
     backend: str = "coo",
     interpret: bool = True,
+    gate: bool = True,
+    gather_edges: Optional[int] = None,
 ) -> jnp.ndarray:
-    """One superstep of combined message propagation. x: (..., V)."""
+    """One superstep of combined message propagation. x: (..., V).
+
+    ``blocks`` may be a dict keyed by semiring name (programs mixing
+    semirings on one view, e.g. Hub² indexing, need one tile table per
+    add-identity).  ``gate=False`` disables sparsity gating (dense
+    baseline for the ``sparsity`` benchmark A/B).  ``gather_edges`` (coo
+    only) reduces over chunks of the active-edge subset instead of all E
+    when a frontier is given — exact for any frontier size.
+    """
+    if isinstance(blocks, dict):
+        blocks = blocks.get(sr.name)
+        if blocks is None and backend != "coo":
+            raise ValueError(
+                f"no block-sparse table for semiring '{sr.name}': build one "
+                "per semiring with Graph.to_blocks(block, sr.add_id)"
+            )
     if backend == "coo":
+        if gate and gather_edges and frontier_mask is not None:
+            return ref.propagate_coo_gated(
+                graph, sr, x, frontier_mask, int(gather_edges)
+            )
         return ref.propagate_coo(graph, sr, x, frontier_mask)
     if blocks is None:
         # A silent COO fallback here would invalidate any backend A/B
@@ -37,15 +88,26 @@ def propagate(
             f"backend '{backend}' needs a block-sparse adjacency: build one "
             "with Graph.to_blocks(block, sr.add_id) and pass blocks="
         )
-    add_id = jnp.asarray(sr.add_id, x.dtype)
-    if frontier_mask is not None:
-        x = jnp.where(frontier_mask, x, add_id)
     lead = x.shape[:-1]
     flat = x.reshape((-1, x.shape[-1]))
+    mflat = None
+    if frontier_mask is not None:
+        mflat = jnp.broadcast_to(frontier_mask, x.shape).reshape(flat.shape)
+    if not gate:
+        # dense baseline: pre-mask x over the full (C, V) slab, no tile
+        # skipping — the very cost the gated path removes.
+        if mflat is not None:
+            flat = jnp.where(mflat, flat, jnp.asarray(sr.add_id, x.dtype))
+            mflat = None
+        active = None
+    else:
+        active = block_activity(blocks, mflat)
     if backend == "blocks_ref":
-        out = ref.propagate_blocks_ref(blocks, sr, flat)
+        out = ref.propagate_blocks_ref(blocks, sr, flat, mask=mflat, active=active)
     elif backend == "pallas":
-        out = frontier.propagate_blocks(blocks, sr, flat, interpret=interpret)
+        out = frontier.propagate_blocks(
+            blocks, sr, flat, mask=mflat, active=active, interpret=interpret
+        )
     else:
         raise ValueError(backend)
     return out.reshape(lead + (x.shape[-1],))

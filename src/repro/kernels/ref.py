@@ -52,59 +52,150 @@ def propagate_coo(graph: Graph, sr: Semiring, x: jnp.ndarray, frontier=None) -> 
     def one(xv):
         msgs = apply_mul(sr, xv[graph.src], graph.w)
         out = sr.segment_combine(msgs, graph.dst, graph.n)
-        # segment reductions fill empty segments with the dtype extreme;
-        # clamp back to the semiring identity (our finite INF sentinel).
-        if sr.name in ("min_plus", "min_right"):
-            return jnp.minimum(out, add_id)
-        if sr.name in ("max_plus", "max_right"):
-            return jnp.maximum(out, add_id)
-        return out
+        return _clamp_empty(sr, out, add_id)
 
     flat = x.reshape((-1, x.shape[-1]))
     out = jax.vmap(one)(flat)
     return out.reshape(x.shape)
 
 
-def propagate_blocks_ref(bs: BlockSparse, sr: Semiring, x: jnp.ndarray) -> jnp.ndarray:
+def _clamp_empty(sr: Semiring, out, add_id):
+    """Segment reductions fill empty segments with the dtype extreme; clamp
+    back to the semiring identity (our finite INF sentinel)."""
+    if sr.name in ("min_plus", "min_right"):
+        return jnp.minimum(out, add_id)
+    if sr.name in ("max_plus", "max_right"):
+        return jnp.maximum(out, add_id)
+    return out
+
+
+def propagate_coo_gated(
+    graph: Graph, sr: Semiring, x: jnp.ndarray, frontier, chunk: int
+) -> jnp.ndarray:
+    """Frontier-gated superstep: reduce over the ACTIVE out-edges only.
+
+    Instead of reducing over all E edges, the active-edge subset (out-edges
+    of frontier vertices, via the graph's CSR view) is front-packed into a
+    permutation, then consumed in padded ``chunk``-sized gathers by a
+    ``while_loop`` that runs ``ceil(active_edges / chunk)`` iterations —
+    exact for ANY frontier size, with reduction work proportional to the
+    frontier, not E.  (Preparing the active set still costs O(E) boolean
+    work per call; the win is skipping the per-edge mul + segment reduce,
+    which dominates for weighted semirings and multi-lane x.)
+
+    Lanes share one edge subset: a source active in ANY lane admits its
+    out-edges, and per-lane exactness is restored by masking x to the
+    add-identity outside each lane's own frontier (same semantics as
+    ``propagate_coo``'s dense masking).
+    """
+    if graph.csr_row is None:
+        raise ValueError("graph has no CSR view; rebuild via Graph.from_edges")
+    add_id = jnp.asarray(sr.add_id, x.dtype)
+    n = graph.n
+    num_e = graph.csr_src.shape[0]
+    lead = x.shape[:-1]
+    xf = x.reshape((-1, n))
+    ff = frontier.reshape((-1, n))
+    xm = jnp.where(ff, xf, add_id)  # (L, V)
+    eact = ff.any(0)[graph.csr_src]  # (E,) edge's source active in some lane
+    erank = jnp.cumsum(eact) - 1
+    total = eact.sum()
+    # front-pack active edge ids; tail slots keep the sentinel num_e
+    perm = (
+        jnp.full((num_e + chunk,), num_e, jnp.int32)
+        .at[jnp.where(eact, erank, num_e + chunk)]
+        .set(jnp.arange(num_e, dtype=jnp.int32), mode="drop")
+    )
+
+    def body(carry):
+        acc, lo = carry
+        idx = jax.lax.dynamic_slice(perm, (lo,), (chunk,))
+        valid = idx < num_e
+        eid = jnp.minimum(idx, num_e - 1)
+        s = graph.csr_src[eid]
+        d = jnp.where(valid, graph.csr_dst[eid], n)  # n = dummy segment
+        msgs = apply_mul(sr, xm[:, s], graph.csr_w[eid])  # (L, chunk)
+        msgs = jnp.where(valid[None, :], msgs, add_id)
+        out = jax.vmap(lambda m: sr.segment_combine(m, d, n + 1))(msgs)[:, :n]
+        return sr.add(acc, _clamp_empty(sr, out, add_id)), lo + chunk
+
+    acc0 = jnp.full_like(xm, add_id)
+    acc, _ = jax.lax.while_loop(
+        lambda c: c[1] < total, body, (acc0, jnp.asarray(0, total.dtype))
+    )
+    return acc.reshape(lead + (n,))
+
+
+def _tile_part(sr: Semiring, xs, t, add_id):
+    """(q, b) x (b, b) -> (q, b) partial combine for one adjacency tile
+    (the jnp mirror of the Pallas kernel's ``_combine_tile``)."""
+    if sr.name in ("min_plus", "max_plus"):
+        s = xs[:, :, None] + t[None].astype(xs.dtype)
+        if jnp.issubdtype(xs.dtype, jnp.integer):
+            if sr.name == "min_plus":
+                big = jnp.asarray(INF, xs.dtype)
+                s = jnp.where((xs[:, :, None] >= big) | (t[None] >= big), add_id, s)
+            else:
+                neg = jnp.asarray(-INF, xs.dtype)
+                s = jnp.where((xs[:, :, None] <= neg) | (t[None] <= neg), add_id, s)
+        return jnp.min(s, 1) if sr.name == "min_plus" else jnp.max(s, 1)
+    if sr.name in ("min_right", "max_right"):
+        present = t != sr.add_id
+        masked = jnp.where(present[None], xs[:, :, None], add_id)
+        return jnp.min(masked, 1) if sr.name == "min_right" else jnp.max(masked, 1)
+    if sr.name == "sum_times":
+        return xs @ t.astype(xs.dtype)
+    raise ValueError(sr.name)
+
+
+def propagate_blocks_ref(
+    bs: BlockSparse, sr: Semiring, x: jnp.ndarray, mask=None, active=None
+) -> jnp.ndarray:
     """jnp oracle operating on the *block-sparse* layout (same math the
-    Pallas kernel performs), for layout-level validation."""
+    Pallas kernel performs), for layout-level validation.
+
+    ``mask``   (q, V) bool: per-lane frontier, applied per visited tile
+               (a masked source contributes the add-identity) — the
+               push-down replacing ``ops.propagate``'s old dense pre-mask.
+    ``active`` (nb, max_bpr) bool: per-tile activity; when given, dead
+               tiles are short-circuited with ``lax.cond`` (a real skip
+               when not under vmap; a select — still exact — under vmap).
+    """
     q = x.shape[0]
     b = bs.block
     nb = bs.num_dst_blocks
     add_id = jnp.asarray(sr.add_id, x.dtype)
-    xpad = x
-    if x.shape[-1] < nb * b:
-        xpad = jnp.pad(x, ((0, 0), (0, nb * b - x.shape[-1])), constant_values=sr.add_id)
-    xb = xpad.reshape(q, nb, b)
+    vp = nb * b
 
-    def dst_block(i):
-        def slot(k, acc):
-            xs = xb[:, bs.src_ids[i, k]]  # (q, b)
-            t = bs.tiles[i, k]  # (b, b)
-            if sr.name in ("min_plus", "max_plus"):
-                s = xs[:, :, None] + t[None].astype(x.dtype)
-                if jnp.issubdtype(x.dtype, jnp.integer):
-                    if sr.name == "min_plus":
-                        big = jnp.asarray(INF, x.dtype)
-                        s = jnp.where((xs[:, :, None] >= big) | (t[None] >= big), add_id, s)
-                    else:
-                        neg = jnp.asarray(-INF, x.dtype)
-                        s = jnp.where((xs[:, :, None] <= neg) | (t[None] <= neg), add_id, s)
-                part = jnp.min(s, 1) if sr.name == "min_plus" else jnp.max(s, 1)
-            elif sr.name in ("min_right", "max_right"):
-                present = t != sr.add_id
-                masked = jnp.where(present[None], xs[:, :, None], add_id)
-                part = jnp.min(masked, 1) if sr.name == "min_right" else jnp.max(masked, 1)
-            elif sr.name == "sum_times":
-                part = xs @ t.astype(x.dtype)
-            else:
-                raise ValueError(sr.name)
-            return sr.add(acc, part)
+    def pad(a, fill):
+        if a.shape[-1] < vp:
+            return jnp.pad(a, ((0, 0), (0, vp - a.shape[-1])), constant_values=fill)
+        return a
 
-        init = jnp.full((q, b), add_id, x.dtype)
-        return jax.lax.fori_loop(
-            0, bs.max_bpr, lambda k, a: slot(k, a), init
+    xb = pad(x, sr.add_id).reshape(q, nb, b)
+    mb = None if mask is None else pad(mask, False).reshape(q, nb, b)
+
+    def tile(i, k, acc):
+        xs = xb[:, bs.src_ids[i, k]]  # (q, b)
+        if mb is not None:
+            xs = jnp.where(mb[:, bs.src_ids[i, k]], xs, add_id)
+        return sr.add(acc, _tile_part(sr, xs, bs.tiles[i, k], add_id))
+
+    init = jnp.full((q, b), add_id, x.dtype)
+    if active is None:
+        dst_block = lambda i: jax.lax.fori_loop(
+            0, bs.max_bpr, lambda k, a: tile(i, k, a), init
         )
+        out = jax.vmap(dst_block)(jnp.arange(nb))  # (nb, q, b)
+    else:
 
-    out = jax.vmap(dst_block)(jnp.arange(nb))  # (nb, q, b)
-    return out.transpose(1, 0, 2).reshape(q, nb * b)[:, : x.shape[-1]]
+        def row(_, i):
+            def slot(k, a):
+                return jax.lax.cond(
+                    active[i, k], lambda a: tile(i, k, a), lambda a: a, a
+                )
+
+            return None, jax.lax.fori_loop(0, bs.max_bpr, slot, init)
+
+        _, out = jax.lax.scan(row, None, jnp.arange(nb))  # (nb, q, b)
+    return out.transpose(1, 0, 2).reshape(q, vp)[:, : x.shape[-1]]
