@@ -610,6 +610,108 @@ def bench_sparsity(quick=False):
     RESULTS.setdefault("sparsity", {})["json"] = out
 
 
+# ------------------------------------------------------------- sharded
+def bench_sharded(quick=False):
+    """Mesh-sharded super-rounds (DESIGN.md §6).
+
+    PPSP (BFS) and label-pruned reachability through ``QuegelEngine(mesh=…)``
+    — the WHOLE fused round (admission + supersteps + done reduction) as one
+    shard_map — swept over partition ∈ {dst, src} × mesh size, against the
+    single-device engine on the same queries (results asserted identical
+    in-run).  Each cell reports rounds/sec, queries/sec and the modeled
+    per-device collective bytes per round (``collective_bytes_per_round``:
+    round-entry state gather + one collective per propagate per superstep).
+
+    Needs >1 device: run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (CPU hosts).
+    On one device the table is skipped without touching the committed JSON.
+    """
+    import jax
+
+    from repro.apps.ppsp import make_bfs_engine
+    from repro.apps.reach import build_reach_index, make_reach_engine, scc_condense
+    from repro.core.graph import barabasi_albert, random_graph
+    from repro.launch.mesh import make_mesh
+
+    ndev = len(jax.devices())
+    if ndev < 2:
+        print("# sharded bench needs >1 device: set "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=8 — skipping")
+        return
+    sizes = [w for w in (2, 4, 8) if w <= ndev]
+    out: dict = {
+        "meta": {
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "devices": ndev,
+            "quick": bool(quick),
+        },
+    }
+
+    def measure(mk, qs):
+        eng = mk()
+        _warm(eng, qs[: max(2, min(4, len(qs)))])
+        m, res = _measure_drain(eng, qs)
+        rmap = {q: {k: np.asarray(v).tolist() for k, v in r.items()}
+                for q, r in res.items()}
+        eng._results.clear()
+        return m, rmap, eng
+
+    def sweep(tag, g, mk_single, mk_sharded, qs):
+        cells: dict = {}
+        base, base_map, _ = measure(mk_single, qs)
+        cells["single"] = base
+        emit("sharded", f"{tag}_single_rounds_per_s", base["super_rounds_per_sec"])
+        for part in ("dst", "src"):
+            cells[part] = {}
+            for w in sizes:
+                if g.n % w:
+                    continue
+                mesh = make_mesh((w,), ("w",))
+                m, rmap, eng = measure(
+                    lambda part=part, mesh=mesh: mk_sharded(mesh, part), qs
+                )
+                assert rmap == base_map, f"sharded {tag} {part} w{w} changed results"
+                coll = eng.collective_bytes_per_round()
+                m["collective"] = coll
+                cells[part][f"w{w}"] = m
+                emit("sharded", f"{tag}_{part}_w{w}_rounds_per_s",
+                     m["super_rounds_per_sec"])
+                emit("sharded", f"{tag}_{part}_w{w}_coll_bytes_per_round",
+                     coll["round_total_bytes"])
+        out[tag] = cells
+
+    # ---------------- PPSP (BFS), power-law graph ------------------------
+    g = barabasi_albert(512 if quick else 1024, 3, seed=7).padded(max(sizes))
+    pairs = _pairs(g.n_real, 8 if quick else 16, seed=8)
+    qs = [jnp.asarray(p, jnp.int32) for p in pairs]
+    sweep(
+        "ppsp", g,
+        lambda: make_bfs_engine(g, capacity=8),
+        lambda mesh, part: make_bfs_engine(g, capacity=8, mesh=mesh, partition=part),
+        qs,
+    )
+
+    # ---------------- reachability (label-pruned BiBFS, two views) -------
+    gr = random_graph(400 if quick else 1200, 2.5, seed=11)
+    _, dag = scc_condense(gr)
+    dag = dag.padded(max(sizes))  # pad BEFORE the index so |V| matches
+    idx = build_reach_index(dag)
+    pr = _pairs(dag.n_real, 8 if quick else 16, seed=12)
+    qr = [jnp.asarray(p, jnp.int32) for p in pr]
+    sweep(
+        "reach", dag,
+        lambda: make_reach_engine(dag, idx, capacity=8),
+        lambda mesh, part: make_reach_engine(
+            dag, idx, capacity=8, mesh=mesh, partition=part
+        ),
+        qr,
+    )
+
+    _merge_bench_json({"sharded": out})
+    RESULTS.setdefault("sharded", {})["json"] = out
+
+
 # ----------------------------------------------------------- kernel bench
 def bench_kernels(quick=False):
     """Frontier-propagation backends (CPU wall-time; Pallas numbers are
@@ -645,6 +747,7 @@ def bench_kernels(quick=False):
 TABLES = {
     "hotpath": bench_hotpath,
     "sparsity": bench_sparsity,
+    "sharded": bench_sharded,
     "table2": table2_interactive,
     "table3": table3_bfs_vs_bibfs,
     "table5": table5_hub2,

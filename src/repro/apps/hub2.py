@@ -102,23 +102,16 @@ class HubLabelBFS(VertexProgram):
 
 
 def build_hub_index(graph: Graph, k: int, capacity: int = 8, backend: str = "coo",
-                    block: int = 128, **kw) -> HubIndex:
+                    **kw) -> HubIndex:
     """Run the |H| BFS queries through the engine and assemble the labels.
 
     HubLabelBFS mixes min_right (distance) and max_right (pre-flag) on the
     SAME view, and one tile table encodes exactly one add-identity
-    (DESIGN.md §2) — so tile backends get a per-semiring ``BlockSparse``
-    table (``{sr.name: tiles}``), resolved per propagate call.  The coo
-    default needs no tiles.
+    (DESIGN.md §2) — the engine's tile backends build one table per
+    semiring on demand, so no table plumbing is needed here.
     """
-    from repro.apps.ppsp import blocks_table
-
     hubs = pick_hubs(graph, k)
     is_hub = jnp.zeros((graph.n,), bool).at[jnp.asarray(hubs)].set(True)
-    if "blocks" not in kw:
-        kw["blocks"] = blocks_table(
-            graph, (MIN_RIGHT, MAX_RIGHT), dict(kw, backend=backend), block
-        )
     eng = QuegelEngine(
         graph,
         HubLabelBFS(is_hub),
@@ -207,20 +200,13 @@ class Hub2PPSP(VertexProgram):
         return dict(ff=state["ff"], fb=state["fb"])
 
 
-def make_hub2_engine(graph: Graph, index: HubIndex, capacity: int = 8, *,
-                     block: int = 128, **kw):
-    from repro.apps.ppsp import blocks_for
-
-    rev = graph.reverse()
-    # Hub2PPSP propagates only min_right (both views), so tile backends work
-    if "blocks" not in kw:
-        kw["blocks"] = blocks_for(graph, MIN_RIGHT.add_id, kw, block)
+def make_hub2_engine(graph: Graph, index: HubIndex, capacity: int = 8, **kw):
     return QuegelEngine(
         graph,
         Hub2PPSP(),
         capacity,
         index=index,
-        aux_graphs={"rev": (rev, blocks_for(rev, MIN_RIGHT.add_id, kw, block))},
+        aux_graphs={"rev": graph.reverse()},
         example_query=jnp.zeros((2,), jnp.int32),
         **kw,
     )

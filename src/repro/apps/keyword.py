@@ -102,12 +102,9 @@ import jax  # noqa: E402  (used in init's vmap)
 
 
 def make_keyword_engine(
-    graph: Graph, tokens: np.ndarray, capacity: int = 8, delta_max: int = 3, *,
-    block: int = 128, **kw
+    graph: Graph, tokens: np.ndarray, capacity: int = 8, delta_max: int = 3, **kw
 ):
     """Reverse graph carries weight N so min-plus transports hop*N+vid."""
-    from repro.apps.ppsp import blocks_for
-
     rev = graph.reverse()
     rev_w = Graph(
         n=rev.n,
@@ -125,7 +122,7 @@ def make_keyword_engine(
         GraphKeywordSearch(rev.n, delta_max),
         capacity,
         index=idx,
-        aux_graphs={"rev": (rev_w, blocks_for(rev_w, MIN_PLUS.add_id, kw, block))},
+        aux_graphs={"rev": rev_w},
         example_query=jnp.full((MAXK,), -1, jnp.int32),
         **kw,
     )

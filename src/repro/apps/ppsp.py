@@ -87,52 +87,25 @@ class BiBFSProgram(VertexProgram):
         return dict(ff=state["ff"], fb=state["fb"])
 
 
-def blocks_for(graph: Graph, add_id, kw: dict, block: int = 128):
-    """Auto-build the block-sparse adjacency when a tile backend is chosen.
-
-    Returns None for the coo backend, so constructors can wire
-    ``backend=`` uniformly: ``make_*_engine(g, backend='pallas')`` just
-    works.  Callers guard their *main* view with ``if "blocks" not in
-    kw`` to honour explicitly-passed tiles; auxiliary views always build
-    their own (the caller's tiles describe a different graph).
-    """
-    if kw.get("backend", "coo") == "coo":
-        return None
-    return graph.to_blocks(block, add_id)
-
-
-def blocks_table(graph: Graph, semirings, kw: dict, block: int = 128):
-    """Per-semiring BlockSparse dict for programs that mix semirings on
-    one view (a tile table encodes exactly one add-identity, DESIGN.md
-    §2): ``{sr.name: tiles}``, resolved per propagate call by
-    ``kernels.ops``.  None for the coo backend, like :func:`blocks_for`."""
-    if kw.get("backend", "coo") == "coo":
-        return None
-    return {sr.name: graph.to_blocks(block, sr.add_id) for sr in semirings}
-
-
-def make_bibfs_engine(graph: Graph, capacity: int = 8, *, block: int = 128, **kw):
-    """Convenience constructor wiring the reverse-graph view."""
+def make_bibfs_engine(graph: Graph, capacity: int = 8, **kw):
+    """Convenience constructor wiring the reverse-graph view.  Tile
+    backends build their per-semiring block tables inside the engine's
+    PropagateBackends (DESIGN.md §2) — no table plumbing here."""
     from repro.core.engine import QuegelEngine
 
-    rev = graph.reverse()
-    if "blocks" not in kw:
-        kw["blocks"] = blocks_for(graph, MIN_RIGHT.add_id, kw, block)
     return QuegelEngine(
         graph,
         BiBFSProgram(),
         capacity,
-        aux_graphs={"rev": (rev, blocks_for(rev, MIN_RIGHT.add_id, kw, block))},
+        aux_graphs={"rev": graph.reverse()},
         example_query=jnp.zeros((2,), jnp.int32),
         **kw,
     )
 
 
-def make_bfs_engine(graph: Graph, capacity: int = 8, *, block: int = 128, **kw):
+def make_bfs_engine(graph: Graph, capacity: int = 8, **kw):
     from repro.core.engine import QuegelEngine
 
-    if "blocks" not in kw:
-        kw["blocks"] = blocks_for(graph, MIN_RIGHT.add_id, kw, block)
     return QuegelEngine(
         graph,
         BFSProgram(),

@@ -292,19 +292,13 @@ class ReachQuery(VertexProgram):
         return dict(reach=state["reach"], visited=visited)
 
 
-def make_reach_engine(dag: Graph, index: ReachIndex, capacity: int = 8, *,
-                      block: int = 128, **kw):
-    from repro.apps.ppsp import blocks_for
-
-    rev = dag.reverse()
-    if "blocks" not in kw:
-        kw["blocks"] = blocks_for(dag, MIN_RIGHT.add_id, kw, block)
+def make_reach_engine(dag: Graph, index: ReachIndex, capacity: int = 8, **kw):
     return QuegelEngine(
         dag,
         ReachQuery(),
         capacity,
         index=index,
-        aux_graphs={"rev": (rev, blocks_for(rev, MIN_RIGHT.add_id, kw, block))},
+        aux_graphs={"rev": dag.reverse()},
         example_query=jnp.zeros((2,), jnp.int32),
         **kw,
     )

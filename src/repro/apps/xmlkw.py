@@ -238,20 +238,16 @@ class MaxMatch(VertexProgram):
 
 
 def make_xml_engine(program_cls, up_graph: Graph, index: XMLIndex, capacity: int = 8,
-                    *, block: int = 128, **kw):
-    from repro.apps.ppsp import blocks_for
-
-    down = up_graph.reverse()
+                    **kw):
     # every XML program propagates bitmap lanes under MAX_RIGHT (both the
-    # upward default view and the top-down 'down' view)
-    if "blocks" not in kw:
-        kw["blocks"] = blocks_for(up_graph, MAX_RIGHT.add_id, kw, block)
+    # upward default view and the top-down 'down' view); tile tables are
+    # built per semiring inside the engine's backends.
     return QuegelEngine(
         up_graph,
         program_cls(),
         capacity,
         index=index,
-        aux_graphs={"down": (down, blocks_for(down, MAX_RIGHT.add_id, kw, block))},
+        aux_graphs={"down": up_graph.reverse()},
         example_query=jnp.full((MAXK,), -1, jnp.int32),
         **kw,
     )

@@ -1,29 +1,33 @@
 """Distributed frontier propagation via shard_map — Quegel's worker
-partitioning mapped onto a TPU mesh (DESIGN.md §2).
+partitioning mapped onto a device mesh (DESIGN.md §6).
 
 Quegel hash-partitions vertices across workers and routes point-to-point
-messages.  On a TPU mesh we partition *edges* and replace routing with one
-collective per super-round:
+messages.  On a mesh we partition *edges* and replace routing with one
+collective per superstep:
 
   partition="dst" (default) — each device owns a contiguous destination
       block; it combines messages for its block from the (replicated)
       frontier values, then the blocks are all-gathered.  Collective bytes
-      per round: |V| * C * dtype (an all-gather of the result).  This is
-      Pregel+'s receiver-side combiner taken to its limit: combining
+      per superstep: |V| * C * dtype (an all-gather of the result).  This
+      is Pregel+'s receiver-side combiner taken to its limit: combining
       happens *before* any data crosses the interconnect.
 
   partition="src" — each device owns a source block and produces a dense
       partial combine for *all* destinations; partials are reduced with a
-      min/max/sum all-reduce.  More collective bytes (|V| * C * log-ish)
-      but immune to destination-degree skew (the paper's hub problem).
+      min/max/sum all-reduce.  More collective bytes (~2x for a ring
+      all-reduce) but immune to destination-degree skew (the paper's hub
+      problem).
 
-Both paths produce results identical to the single-device reference; the
-roofline pass (EXPERIMENTS.md §Perf) compares their collective terms.
+Both paths produce results identical to the single-device reference.
+``ShardedBackend`` implements the ``kernels/ops.py`` PropagateBackend
+protocol twice over: ``propagate`` is the standalone replicated-x entry
+point (one jitted shard_map per semiring), while ``make_local`` returns
+the propagate closure used INSIDE an enclosing shard_map body — that is
+what lets ``QuegelEngine(mesh=...)`` run the whole fused super-round
+(admission + k supersteps + done reduction) as one SPMD program with one
+collective per superstep (DESIGN.md §6).
 """
 from __future__ import annotations
-
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +37,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core.graph import Graph
 from repro.core.semiring import Semiring
 from repro.kernels import ref
+from repro.kernels.ops import PropagateBackend
 
 
 def _shard_map(body, mesh, in_specs, out_specs):
@@ -54,22 +59,30 @@ def _shard_map(body, mesh, in_specs, out_specs):
     return sm(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
 
 
-def _pad_partition(ids_sorted_key, src, dst, w, n_parts, key_of):
-    """Split COO edges into n_parts buckets by key_of, padding to equal size."""
-    buckets = [[] for _ in range(n_parts)]
-    for e in range(len(src)):
-        buckets[key_of(e)].append(e)
-    emax = max(1, max(len(b) for b in buckets))
+def _pad_partition(src, dst, w, n_parts, key):
+    """Split COO edges into n_parts buckets by the per-edge ``key`` array,
+    padding every bucket to the max bucket size.
+
+    Vectorized: one stable argsort groups edges by bucket (preserving the
+    original within-bucket edge order, so segment reductions see the same
+    operand order as the single-device reference) and one bincount sizes
+    the padding — no Python loop over E.
+    """
+    key = np.asarray(key)
+    order = np.argsort(key, kind="stable")
+    counts = np.bincount(key, minlength=n_parts)
+    emax = int(max(1, counts.max())) if counts.size else 1
+    rows = key[order]
+    starts = np.concatenate(([0], np.cumsum(counts)))
+    cols = np.arange(len(order)) - starts[rows]
     srcp = np.zeros((n_parts, emax), np.int32)
     dstp = np.zeros((n_parts, emax), np.int32)
     wp = np.zeros((n_parts, emax), w.dtype)
     valid = np.zeros((n_parts, emax), bool)
-    for p, b in enumerate(buckets):
-        k = len(b)
-        srcp[p, :k] = src[b]
-        dstp[p, :k] = dst[b]
-        wp[p, :k] = w[b]
-        valid[p, :k] = True
+    srcp[rows, cols] = src[order]
+    dstp[rows, cols] = dst[order]
+    wp[rows, cols] = w[order]
+    valid[rows, cols] = True
     return srcp, dstp, wp, valid
 
 
@@ -77,7 +90,9 @@ class ShardedGraph:
     """Edge partitions of a Graph for a mesh axis of size n_parts."""
 
     def __init__(self, graph: Graph, n_parts: int, partition: str = "dst"):
-        assert graph.n % n_parts == 0, "pad |V| to a multiple of the mesh axis"
+        assert graph.n % n_parts == 0, (
+            "pad |V| to a multiple of the mesh axis (Graph.padded)"
+        )
         self.graph = graph
         self.n_parts = n_parts
         self.partition = partition
@@ -86,77 +101,113 @@ class ShardedGraph:
         dst = np.asarray(graph.dst)
         w = np.asarray(graph.w)
         key = (dst if partition == "dst" else src) // self.block
-        srcp, dstp, wp, valid = _pad_partition(None, src, dst, w, n_parts, lambda e: key[e])
+        srcp, dstp, wp, valid = _pad_partition(src, dst, w, n_parts, key)
         self.srcp = jnp.asarray(srcp)
         self.dstp = jnp.asarray(dstp)
         self.wp = jnp.asarray(wp)
         self.valid = jnp.asarray(valid)
 
 
+class ShardedBackend(PropagateBackend):
+    """PropagateBackend over a device mesh: edge partitions + one
+    collective per superstep (module docstring; DESIGN.md §6)."""
+
+    name = "sharded"
+
+    def __init__(self, sg: ShardedGraph, mesh: Mesh, axis: str):
+        self.sg = sg
+        self.graph = sg.graph
+        self.mesh = mesh
+        self.axis = axis
+        self._jitted: dict = {}
+
+    @property
+    def parts(self):
+        """The (n_parts, Emax) edge-partition arrays, in shard_map arg order."""
+        return (self.sg.srcp, self.sg.dstp, self.sg.wp, self.sg.valid)
+
+    @property
+    def part_specs(self):
+        return (P(self.axis, None),) * 4
+
+    def make_local(self, parts):
+        """Propagate closure for use INSIDE an enclosing shard_map body.
+
+        ``parts`` is this device's (1, Emax) slice of :attr:`parts`; the
+        returned ``prop(sr, x, frontier)`` takes the FULL (gathered /
+        replicated) (..., V) value, combines over the local edge shard,
+        and performs the single collective (all-gather of the owned dst
+        block, or a semiring all-reduce of the dense partial).
+        """
+        srcp, dstp, wp, valid = (p[0] for p in parts)
+        sg, axis = self.sg, self.axis
+        blockn, n, part = sg.block, sg.graph.n, sg.partition
+
+        def prop(sr: Semiring, x, frontier=None):
+            add_id = jnp.asarray(sr.add_id, x.dtype)
+            if frontier is not None:
+                x = jnp.where(frontier, x, add_id)
+            lead = x.shape[:-1]
+            xf = x.reshape((-1, n))
+            msgs = ref.apply_mul(sr, xf[:, srcp], wp)
+            msgs = jnp.where(valid[None, :], msgs, add_id)
+            if part == "dst":
+                # padding entries fall outside [0, block) and are dropped;
+                # their msgs are add_id anyway.
+                seg = dstp - jax.lax.axis_index(axis) * blockn
+                nseg = blockn
+            else:
+                seg, nseg = dstp, n
+
+            def one(m):
+                return ref._clamp_empty(
+                    sr, sr.segment_combine(m, seg, nseg), add_id
+                )
+
+            y = jax.vmap(one)(msgs)
+            if part == "dst":
+                y = jax.lax.all_gather(y, axis, axis=1, tiled=True)
+            elif sr.name in ("min_plus", "min_right"):
+                y = jax.lax.pmin(y, axis)
+            elif sr.name in ("max_plus", "max_right"):
+                y = jax.lax.pmax(y, axis)
+            else:
+                y = jax.lax.psum(y, axis)
+            return y.reshape(lead + (n,))
+
+        return prop
+
+    def propagate(self, sr: Semiring, x, frontier=None):
+        """Standalone entry point: x (and the result) replicated across the
+        mesh, one jitted shard_map per semiring (cached)."""
+        fn = self._jitted.get(sr.name)
+        if fn is None:
+
+            def body(xf, *parts):
+                return self.make_local(parts)(sr, xf)
+
+            fn = jax.jit(
+                _shard_map(
+                    body,
+                    mesh=self.mesh,
+                    in_specs=(P(None, None),) + self.part_specs,
+                    out_specs=P(None, None),
+                )
+            )
+            self._jitted[sr.name] = fn
+        if frontier is not None:
+            x = jnp.where(frontier, x, jnp.asarray(sr.add_id, x.dtype))
+        lead = x.shape[:-1]
+        y = fn(x.reshape((-1, self.graph.n)), *self.parts)
+        return y.reshape(lead + (self.graph.n,))
+
+
 def make_propagate_sharded(sg: ShardedGraph, mesh: Mesh, axis: str, sr: Semiring):
-    """Returns a jit-able propagate(x, frontier) -> (C, V) replicated."""
-    block, n = sg.block, sg.graph.n
+    """Returns a propagate(x, frontier) -> (..., V) replicated — kept as
+    the per-semiring functional wrapper over :class:`ShardedBackend`."""
+    be = ShardedBackend(sg, mesh, axis)
 
-    def local_combine(xf, srcp, dstp, wp, valid, dst_offset):
-        msgs = ref.apply_mul(sr, xf[:, srcp], wp)
-        add_id = jnp.asarray(sr.add_id, xf.dtype)
-        msgs = jnp.where(valid[None, :], msgs, add_id)
-        seg = dstp - dst_offset
-
-        def one(m):
-            out = sr.segment_combine(m, seg, block if sg.partition == "dst" else n)
-            if sr.name in ("min_plus", "min_right"):
-                return jnp.minimum(out, add_id)
-            if sr.name in ("max_plus", "max_right"):
-                return jnp.maximum(out, add_id)
-            return out
-
-        return jax.vmap(one)(msgs)
-
-    if sg.partition == "dst":
-
-        def body(x, srcp, dstp, wp, valid):
-            # srcp etc. are this device's shard (1, Emax) under shard_map
-            i = jax.lax.axis_index(axis)
-            y_local = local_combine(x, srcp[0], dstp[0], wp[0], valid[0], i * block)
-            return jax.lax.all_gather(y_local, axis, axis=1, tiled=True)
-
-        spec_e = P(axis, None)
-
-        @jax.jit
-        def propagate(x, frontier=None):
-            if frontier is not None:
-                x = jnp.where(frontier, x, jnp.asarray(sr.add_id, x.dtype))
-            f = _shard_map(
-                body,
-                mesh=mesh,
-                in_specs=(P(None, None), spec_e, spec_e, spec_e, spec_e),
-                out_specs=P(None, None),
-            )
-            return f(x, sg.srcp, sg.dstp, sg.wp, sg.valid)
-
-    else:  # src partition: dense partials + reduction collective
-
-        def body(x, srcp, dstp, wp, valid):
-            y_part = local_combine(x, srcp[0], dstp[0], wp[0], valid[0], 0)
-            if sr.name in ("min_plus", "min_right"):
-                return jax.lax.pmin(y_part, axis)
-            if sr.name in ("max_plus", "max_right"):
-                return jax.lax.pmax(y_part, axis)
-            return jax.lax.psum(y_part, axis)
-
-        spec_e = P(axis, None)
-
-        @jax.jit
-        def propagate(x, frontier=None):
-            if frontier is not None:
-                x = jnp.where(frontier, x, jnp.asarray(sr.add_id, x.dtype))
-            f = _shard_map(
-                body,
-                mesh=mesh,
-                in_specs=(P(None, None), spec_e, spec_e, spec_e, spec_e),
-                out_specs=P(None, None),
-            )
-            return f(x, sg.srcp, sg.dstp, sg.wp, sg.valid)
+    def propagate(x, frontier=None):
+        return be.propagate(sr, x, frontier)
 
     return propagate

@@ -11,16 +11,32 @@ Hot path (DESIGN.md §3): admission and the superstep advance are FUSED into
 one jitted call per round.  The slot table is donated
 (``donate_argnums=0``) so each round updates the ``(C, V, ...)`` slabs in
 place instead of copying them; admission of up to C queued queries is one
-batched scatter (``vmap``-ed ``init`` + ``.at[slots].set(mode='drop')``)
-inside the same dispatch; and slot liveness is mirrored host-side so a
-round performs exactly ONE device->host sync (the ``done``/``step``
-readback).  With ``steps_per_round=k`` the round runs up to k supersteps
-in a ``lax.while_loop`` (all-live-slots-done early exit), so that one
-sync amortizes over k supersteps; propagation itself is sparsity-gated
+batched scatter (``vmap``-ed ``init`` + masked select) inside the same
+dispatch; and slot liveness is mirrored host-side so a round performs
+exactly ONE device->host sync (the ``done``/``step`` readback).  With
+``steps_per_round=k`` the round runs up to k supersteps in a
+``lax.while_loop`` (all-live-slots-done early exit), so that one sync
+amortizes over k supersteps; propagation itself is sparsity-gated
 (``gate``/``gather_edges``, DESIGN.md §3) so superstep cost tracks the
 active frontier.  The pre-refactor path (per-query admission dispatches,
 live readback before every round, undonated copies) is preserved under
 ``legacy=True`` as the benchmark baseline.
+
+Propagation is pluggable (DESIGN.md §2/§6): the engine holds one
+``kernels/ops.py::PropagateBackend`` per named view ('default', 'rev', ...)
+and never branches on the physical plan — COO segment ops, block tiles,
+Pallas, or a device mesh are interchangeable under the same vertex
+program (the Pregelix logical/physical split).
+
+SPMD mode (DESIGN.md §6): ``QuegelEngine(mesh=...)`` shards every
+``(C, ..., V)`` slot-table leaf over a mesh axis and runs the ENTIRE fused
+round — batched admission, the k-superstep while_loop, the done-flag
+reduction — inside one ``shard_map``.  The round body all-gathers the
+V-sharded leaves at entry, advances with ONE collective per propagate call
+(``ShardedBackend``'s dst/src edge partitions), and slices each device's
+V-shard back out, so donation, single-sync rounds and multi-superstep
+fusion all survive sharding and results are identical to the
+single-device engine.
 
 Data taxonomy (paper §3.2) maps as:
   V-data  : the ``Graph``/index arrays, closed over by the jitted round —
@@ -40,7 +56,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import BlockSparse, Graph
+from repro.core.graph import Graph
 from repro.core.semiring import Semiring
 from repro.kernels import ops
 
@@ -127,11 +143,28 @@ class QuegelEngine:
     """Superstep-sharing scheduler (paper §3).
 
     capacity  : the paper's C — max queries in flight per super-round.
-    backend   : 'coo' (segment ops), 'blocks_ref', or 'pallas'.
+    backend   : a ``PropagateBackend`` spec — 'coo', 'coo_gated',
+                'blocks_ref', 'pallas', 'sharded' (implied by mesh=) — or a
+                ready backend instance.  One backend is built per named
+                view; tile backends build per-semiring block tables on
+                demand (DESIGN.md §2).
+    blocks    : optional prebuilt tile table(s) for the default view — a
+                single ``BlockSparse`` or a ``{sr.name: BlockSparse}`` dict.
+    aux_graphs: named alternate propagation views, e.g. {"rev": g.reverse()}
+                for backward BFS; values may be a Graph or (Graph, blocks).
+    block     : tile size for lazily-built block tables.
+    mesh      : a jax Mesh — turns on SPMD mode (module docstring): slot
+                tables sharded over ``mesh_axis`` (default: the mesh's last
+                axis), the whole fused round one shard_map, edge partitions
+                per ``partition``.  |V| must divide the axis size
+                (``Graph.padded``); results and stats are identical to the
+                single-device engine.
+    partition : 'dst' (all-gather of combined blocks) or 'src' (semiring
+                all-reduce of dense partials) — DESIGN.md §6.
     legacy    : keep the pre-overhaul round structure (per-query admission
                 dispatches, live readback, per-query extraction, no
                 donation) — the A/B baseline for the benchmark harness;
-                results and stats are identical.
+                results and stats are identical.  Single-device only.
     donate    : donate the slot table to the round dispatch so XLA aliases
                 outputs to inputs (in-place update, no per-round copy of
                 the (C, V, ...) slabs).  Default 'auto': on for TPU/GPU,
@@ -147,6 +180,8 @@ class QuegelEngine:
     gate      : sparsity gating (DESIGN.md §3): tile backends skip
                 frontier-dead adjacency tiles instead of pre-masking x
                 densely.  ``gate=False`` is the dense A/B baseline.
+                (No effect on the sharded backend, which combines densely
+                over each device's edge shard.)
     gather_edges : when set (coo backend), frontier-carrying propagation
                 reduces over padded chunks of this many ACTIVE edges
                 instead of all E — for workloads whose frontiers are known
@@ -163,9 +198,10 @@ class QuegelEngine:
         capacity: int = 8,
         *,
         index: Any = None,
-        backend: str = "coo",
+        backend: Any = "coo",
         blocks: Optional[Any] = None,
         aux_graphs: Optional[dict] = None,
+        block: int = 128,
         interpret: bool = True,
         example_query: Any = None,
         propagate_override: Optional[dict] = None,
@@ -175,20 +211,19 @@ class QuegelEngine:
         gate: bool = True,
         gather_edges: Optional[int] = None,
         track_frontier: bool = False,
+        mesh: Any = None,
+        mesh_axis: Optional[str] = None,
+        partition: str = "dst",
     ):
         """``propagate_override`` maps a view name ('default', 'rev', ...)
-        to a callable (semiring, x, frontier) -> y, e.g. the shard_map
-        propagation of core.distributed — the engine is agnostic to how
-        messages move (single device, Pallas tiles, or a TPU mesh)."""
+        to a callable (semiring, x, frontier) -> y — wrapped in a
+        ``CallableBackend`` so even escape hatches route through the
+        PropagateBackend protocol."""
         self.graph = graph
         self.program = program
         self.capacity = int(capacity)
         self.index = index
-        self.backend = backend
         self.blocks = blocks
-        # named alternate propagation views, e.g. {"rev": (reverse_graph,
-        # reverse_blocks)} for backward BFS
-        self.aux_graphs = {k: (g_, b_) for k, (g_, b_) in (aux_graphs or {}).items()}
         self.propagate_override = dict(propagate_override or {})
         self.interpret = interpret
         self.legacy = bool(legacy)
@@ -200,6 +235,77 @@ class QuegelEngine:
         self.gate = bool(gate)
         self.gather_edges = gather_edges
         self.track_frontier = bool(track_frontier)
+        self.mesh = mesh
+        self.partition = partition
+        if mesh is not None:
+            if not isinstance(backend, str) or backend not in ("coo", "sharded"):
+                raise ValueError(
+                    f"mesh= implies the sharded backend; got backend={backend!r}"
+                )
+            backend = "sharded"
+            self._mesh_axis = mesh_axis or mesh.axis_names[-1]
+            self._n_parts = int(mesh.shape[self._mesh_axis])
+            if self.legacy:
+                raise ValueError("legacy mode is single-device only")
+            if self.propagate_override:
+                raise ValueError(
+                    "propagate_override and mesh= are mutually exclusive: "
+                    "override callables cannot run inside the SPMD round"
+                )
+            if graph.n % self._n_parts:
+                raise ValueError(
+                    f"|V|={graph.n} must be a multiple of mesh axis "
+                    f"'{self._mesh_axis}'={self._n_parts}: repad via "
+                    f"Graph.padded({self._n_parts})"
+                )
+        elif backend == "sharded":
+            raise ValueError("backend='sharded' needs mesh=")
+        self.backend = backend
+
+        # One PropagateBackend per named view — the engine's only contact
+        # with the physical propagation plan.
+        views = {"default": (graph, blocks)}
+        for name, val in (aux_graphs or {}).items():
+            g_, b_ = val if isinstance(val, tuple) else (val, None)
+            views[name] = (g_, b_)
+        self.aux_graphs = {k: v for k, v in views.items() if k != "default"}
+        if isinstance(backend, ops.PropagateBackend):
+            # A ready instance owns ONE view's graph; reusing it for aux
+            # views would propagate them over the wrong adjacency.
+            unbound = set(self.aux_graphs) - set(self.propagate_override)
+            if unbound:
+                raise ValueError(
+                    f"backend instance cannot serve auxiliary views {sorted(unbound)}: "
+                    "pass a spec string, or cover each view via propagate_override"
+                )
+        self._backends: dict = {}
+        for name, (g_, b_) in views.items():
+            if mesh is not None and g_.n != graph.n:
+                raise ValueError(
+                    f"view '{name}' has |V|={g_.n} != {graph.n}: all views "
+                    "must share one padded vertex space under mesh="
+                )
+            if mesh is not None and b_ is not None:
+                raise ValueError(
+                    f"blocks for view '{name}' have no effect under mesh=: "
+                    "the sharded backend combines over edge partitions, not "
+                    "tile tables"
+                )
+            self._backends[name] = ops.make_backend(
+                backend,
+                g_,
+                blocks=b_,
+                block=block,
+                gate=self.gate,
+                gather_edges=gather_edges,
+                interpret=interpret,
+                mesh=mesh,
+                mesh_axis=mesh_axis,
+                partition=partition,
+            )
+        for name, fn in self.propagate_override.items():
+            self._backends[name] = ops.CallableBackend(fn)
+
         if donate == "auto":
             donate = jax.default_backend() not in ("cpu",)
         self.donate = bool(donate)
@@ -212,29 +318,15 @@ class QuegelEngine:
         # every round already pays, so admission never touches the device.
         self._live_mask = np.zeros(self.capacity, dtype=bool)
         self.stats = EngineStats()
+        self._round_args: tuple = ()
+        self._collective_model: Optional[dict] = None
         if example_query is None:
             raise ValueError("example_query required to shape the slot table")
         self._build(example_query)
 
     # ------------------------------------------------------------ plumbing
     def _propagate(self, sr: Semiring, x, frontier=None, which: str = "default"):
-        if which in self.propagate_override:
-            return self.propagate_override[which](sr, x, frontier)
-        if which == "default":
-            g, b = self.graph, self.blocks
-        else:
-            g, b = self.aux_graphs[which]
-        return ops.propagate(
-            g,
-            sr,
-            x,
-            frontier,
-            blocks=b,
-            backend=self.backend,
-            interpret=self.interpret,
-            gate=self.gate,
-            gather_edges=self.gather_edges,
-        )
+        return self._backends[which].propagate(sr, x, frontier)
 
     def _build(self, example_query):
         g, prog, C = self.graph, self.program, self.capacity
@@ -287,61 +379,71 @@ class QuegelEngine:
             slots["done"] = slots["done"] & ~admit_mask
             return slots
 
-        def super_round(slots):
-            """ONE superstep for every live slot.  ``done`` ACCUMULATES
-            (a slot finishing at superstep j of a multi-step round must
-            still read True at the round's single readback); callers zero
-            it at round entry via ``zero_done``."""
+        def make_super_round(prop):
+            """ONE superstep for every live slot, with ``prop`` as the
+            propagation entry point — the engine's own backends outside a
+            mesh, or the per-device local closures inside the SPMD round.
+            ``done`` ACCUMULATES (a slot finishing at superstep j of a
+            multi-step round must still read True at the round's single
+            readback); callers zero it at round entry via ``zero_done``."""
 
             def one(state, query, step, live):
                 ctx = StepCtx(
                     graph=g,
                     query=query,
                     step=step + 1,  # Pregel supersteps are 1-based
-                    propagate=self._propagate,
+                    propagate=prop,
                     index=self.index,
                 )
                 new_state, done = prog.superstep(state, ctx)
                 state = tree_where(live, new_state, state)
                 return state, done & live
 
-            state, done = jax.vmap(one)(
-                slots["state"], slots["query"], slots["step"], slots["live"]
-            )
-            live = slots["live"]
-            return dict(
-                state=state,
-                query=slots["query"],
-                step=slots["step"] + live.astype(jnp.int32),
-                live=live & ~done,
-                done=slots["done"] | done,
-            )
+            def super_round(slots):
+                state, done = jax.vmap(one)(
+                    slots["state"], slots["query"], slots["step"], slots["live"]
+                )
+                live = slots["live"]
+                return dict(
+                    state=state,
+                    query=slots["query"],
+                    step=slots["step"] + live.astype(jnp.int32),
+                    live=live & ~done,
+                    done=slots["done"] | done,
+                )
+
+            return super_round
 
         def zero_done(slots):
             return dict(slots, done=jnp.zeros_like(slots["done"]))
 
         spr = self.steps_per_round
 
-        def round_k(slots):
+        def make_round_k(prop):
             """Up to ``spr`` supersteps in ONE dispatch, early-exiting as
             soon as every live slot has voted done — barrier count drops
             ~spr× while per-slot ``step`` counters stay exact."""
-            slots = zero_done(slots)
-            if spr == 1:
-                return super_round(slots)
+            super_round = make_super_round(prop)
 
-            def cond(carry):
-                s, it = carry
-                return (it < spr) & s["live"].any()
+            def round_k(slots):
+                slots = zero_done(slots)
+                if spr == 1:
+                    return super_round(slots)
 
-            def body(carry):
-                s, it = carry
-                return super_round(s), it + 1
+                def cond(carry):
+                    s, it = carry
+                    return (it < spr) & s["live"].any()
 
-            slots, _ = jax.lax.while_loop(
-                cond, body, (slots, jnp.asarray(0, jnp.int32))
-            )
-            return slots
+                def body(carry):
+                    s, it = carry
+                    return super_round(s), it + 1
+
+                slots, _ = jax.lax.while_loop(
+                    cond, body, (slots, jnp.asarray(0, jnp.int32))
+                )
+                return slots
+
+            return round_k
 
         def extract(slots, idx):
             st = jax.tree.map(lambda tab: tab[idx], slots["state"])
@@ -349,10 +451,34 @@ class QuegelEngine:
             return prog.extract(st, q)
 
         self._extract = jax.jit(extract)
+
+        # Discovery pass: abstractly trace ONE round with a shape-preserving
+        # recording propagate.  This (a) learns every (view, semiring) the
+        # program propagates so tile backends can build their per-semiring
+        # tables eagerly, OUTSIDE any jit trace (an in-trace build would
+        # cache that trace's constants), and (b) records the per-superstep
+        # propagate payloads the SPMD collective model reports.
+        self._prop_trace: list = []
+
+        def recording(sr, x, frontier=None, which="default"):
+            self._prop_trace.append(
+                (which, sr, tuple(x.shape), np.dtype(x.dtype))
+            )
+            return x
+
+        jax.eval_shape(make_round_k(recording), self._slots)
+        for which, sr, _, _ in self._prop_trace:
+            warm = getattr(self._backends[which], "table_for", None)
+            if warm is not None:
+                warm(sr)
         if self.legacy:
             self._admit = jax.jit(admit)
-            self._super_round = jax.jit(lambda s: super_round(zero_done(s)))
+            legacy_round = make_super_round(self._propagate)
+            self._super_round = jax.jit(lambda s: legacy_round(zero_done(s)))
+        elif self.mesh is not None:
+            self._build_spmd(make_round_k, admit_batch)
         else:
+            round_k = make_round_k(self._propagate)
             # Donating the slot table lets XLA alias every (C, V, ...) slab
             # output to its input: the hot loop mutates in place, no copy.
             dn = (0,) if self.donate else ()
@@ -363,6 +489,8 @@ class QuegelEngine:
                 ),
                 donate_argnums=dn,
             )
+
+        if not self.legacy:
 
             def extract_all(slots):
                 return jax.vmap(prog.extract)(slots["state"], slots["query"])
@@ -387,6 +515,155 @@ class QuegelEngine:
                 return jax.vmap(one)(slots["state"], slots["live"]).sum()
 
             self._frontier_count = jax.jit(frontier_count)
+
+    # ---------------------------------------------------------------- SPMD
+    def _build_spmd(self, make_round_k, admit_batch):
+        """Compile the fused round as ONE shard_map over the mesh axis.
+
+        V-sharded leaves (trailing dim == |V|) are all-gathered at round
+        entry, the round body runs on full values (so vertex programs'
+        global reductions and indexed lookups stay correct unchanged) with
+        each device combining only its edge shard — one collective per
+        propagate call — and each device's V-shard is sliced back out for
+        the round's outputs.  Compute on the (C, V) slabs is replicated;
+        the O(E) edge work, the term that dominates on big graphs, splits
+        n_parts ways (DESIGN.md §6).
+        """
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.core.distributed import _shard_map
+
+        g, C = self.graph, self.capacity
+        mesh, axis, nparts = self.mesh, self._mesh_axis, self._n_parts
+
+        def is_vq(leaf):
+            return jnp.ndim(leaf) >= 2 and jnp.shape(leaf)[-1] == g.n
+
+        def spec_of(leaf):
+            nd = jnp.ndim(leaf)
+            if is_vq(leaf):
+                return P(*([None] * (nd - 1) + [axis]))
+            return P(*([None] * nd))
+
+        is_p = lambda x: isinstance(x, P)
+        shard_tree = jax.tree.map(is_vq, self._slots)
+        slot_specs = jax.tree.map(spec_of, self._slots)
+        query_specs = jax.tree.map(
+            lambda leaf: P(*([None] * jnp.ndim(leaf))), self._slots["query"]
+        )
+        self._edge_parts = {k: be.parts for k, be in self._backends.items()}
+        edge_specs = {
+            k: jax.tree.map(lambda _: P(axis, None), v)
+            for k, v in self._edge_parts.items()
+        }
+
+        def gather(slots):
+            def f(x, s):
+                if not s:
+                    return x
+                return jax.lax.all_gather(x, axis, axis=jnp.ndim(x) - 1, tiled=True)
+
+            return jax.tree.map(f, slots, shard_tree)
+
+        def scatter(slots):
+            i = jax.lax.axis_index(axis)
+
+            def f(x, s):
+                if not s:
+                    return x
+                blk = x.shape[-1] // nparts
+                return jax.lax.dynamic_slice_in_dim(x, i * blk, blk, jnp.ndim(x) - 1)
+
+            return jax.tree.map(f, slots, shard_tree)
+
+        def local_prop(parts):
+            fns = {k: self._backends[k].make_local(parts[k]) for k in parts}
+
+            def prop(sr, x, frontier=None, which="default"):
+                return fns[which](sr, x, frontier)
+
+            return prop
+
+        def body_round(slots, parts):
+            rk = make_round_k(local_prop(parts))
+            return scatter(rk(gather(slots)))
+
+        def body_admit(slots, admit_mask, queries, parts):
+            rk = make_round_k(local_prop(parts))
+            return scatter(rk(admit_batch(gather(slots), admit_mask, queries)))
+
+        dn = (0,) if self.donate else ()
+        self._round = jax.jit(
+            _shard_map(
+                body_round, mesh,
+                in_specs=(slot_specs, edge_specs), out_specs=slot_specs,
+            ),
+            donate_argnums=dn,
+        )
+        self._round_admit = jax.jit(
+            _shard_map(
+                body_admit, mesh,
+                in_specs=(slot_specs, P(None), query_specs, edge_specs),
+                out_specs=slot_specs,
+            ),
+            donate_argnums=dn,
+        )
+
+        # Place the slot table and edge partitions once, in the layout the
+        # round expects, so no per-call resharding (and donation can alias).
+        to_shardings = lambda specs: jax.tree.map(
+            lambda s: NamedSharding(mesh, s), specs, is_leaf=is_p
+        )
+        self._slots = jax.device_put(self._slots, to_shardings(slot_specs))
+        self._edge_parts = jax.device_put(
+            self._edge_parts, to_shardings(edge_specs)
+        )
+        self._round_args = (self._edge_parts,)
+
+        # Collective payload model from the discovery pass (_build): one
+        # entry per propagate call per superstep, each a (C, ..., V) slab.
+        prop_bytes = sum(
+            int(np.prod(shape)) * dt.itemsize
+            for _, _, shape, dt in self._prop_trace
+        )
+        state_bytes = sum(
+            int(np.prod(np.shape(leaf))) * np.dtype(leaf.dtype).itemsize
+            for leaf, s in zip(
+                jax.tree.leaves(self._slots), jax.tree.leaves(shard_tree)
+            )
+            if s
+        )
+        self._collective_model = dict(
+            propagate_calls_per_superstep=len(self._prop_trace),
+            propagate_payload_bytes_per_superstep=prop_bytes * C,
+            state_gather_payload_bytes=state_bytes,
+        )
+
+    def collective_bytes_per_round(self) -> Optional[dict]:
+        """Modeled per-device wire bytes for one SPMD super-round
+        (DESIGN.md §6); None outside mesh mode.
+
+        dst partition all-gathers each propagate's combined (C, V) payload
+        (ring wire cost ≈ payload · (w-1)/w per device); src all-reduces
+        the dense partial (≈ 2× that for a ring).  Round entry additionally
+        all-gathers the V-sharded slot leaves.
+        """
+        if self._collective_model is None:
+            return None
+        m = self._collective_model
+        w = self._n_parts
+        f = (w - 1) / w if w > 1 else 0.0
+        prop_factor = f if self.partition == "dst" else 2.0 * f
+        per_step = m["propagate_payload_bytes_per_superstep"] * prop_factor
+        state = m["state_gather_payload_bytes"] * f
+        return dict(
+            n_parts=w,
+            partition=self.partition,
+            propagate_calls_per_superstep=m["propagate_calls_per_superstep"],
+            state_gather_bytes=state,
+            propagate_bytes_per_superstep=per_step,
+            round_total_bytes=state + self.steps_per_round * per_step,
+        )
 
     # -------------------------------------------------------------- client
     def submit(self, query) -> int:
@@ -453,9 +730,11 @@ class QuegelEngine:
                     admit_mask[slot] = True
                     by_slot[slot] = q
                 queries = jax.tree.map(lambda *xs: np.stack(xs), *by_slot)
-                self._slots = self._round_admit(self._slots, admit_mask, queries)
+                self._slots = self._round_admit(
+                    self._slots, admit_mask, queries, *self._round_args
+                )
             else:
-                self._slots = self._round(self._slots)
+                self._slots = self._round(self._slots, *self._round_args)
         # THE barrier: one device->host sync per super-round
         done = np.asarray(self._slots["done"])
         steps = np.asarray(self._slots["step"])

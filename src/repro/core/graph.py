@@ -126,6 +126,25 @@ class Graph:
             csr_w=jnp.asarray(w[csr]),
         )
 
+    def padded(self, multiple: int) -> "Graph":
+        """Repad so ``n`` is a multiple of ``multiple`` (a mesh shard axis).
+
+        Padding vertices carry no edges; returns self when already aligned.
+        Note this rebuilds the COO/CSR views — repad BEFORE building any
+        index or block-sparse tables against the graph.
+        """
+        if self.n % multiple == 0:
+            return self
+        w = np.asarray(self.w)
+        return Graph.from_edges(
+            np.asarray(self.src),
+            np.asarray(self.dst),
+            self.n_real,
+            w=w,
+            pad_to=_pad_to(self.n, multiple),
+            weight_dtype=w.dtype,
+        )
+
     def reverse(self) -> "Graph":
         w = np.asarray(self.w)
         return Graph.from_edges(

@@ -1,11 +1,25 @@
-"""jit'd dispatch layer for frontier propagation.
+"""Propagation backends: the physical plans behind one logical superstep.
 
-``propagate`` picks the execution path:
-  * ``coo``    — segment-reduction reference (exact; the CPU-fast path the
-                 engine uses in this container), with an optional
-                 frontier-gated active-edge gather (``gather_edges``),
-  * ``blocks`` — the Pallas block-sparse kernel (TPU target; interpret-mode
-                 on CPU for validation) and its jnp oracle.
+A *backend* (``PropagateBackend``) owns its prepared graph data — the COO
+view, the CSR view for active-edge gathers, per-semiring block-sparse tile
+tables, or a mesh's edge partitions — and exposes exactly one operation:
+
+    propagate(sr, x, frontier=None) -> combined incoming messages (shape of x)
+
+This is the logical/physical split Pregelix applies to Pregel plans: the
+engine (``core/engine.py``) holds one backend per named propagation view
+and never branches on *how* messages move.  Concrete plans:
+
+  * ``coo``        — segment-reduction reference (exact; the CPU-fast path
+                     in this container); with ``gather_edges`` set it
+                     reduces over chunks of the ACTIVE edge subset when a
+                     frontier is given,
+  * ``coo_gated``  — the same with the active-edge gather always on,
+  * ``blocks_ref`` — jnp oracle over block-sparse dense tiles,
+  * ``pallas``     — the Pallas frontier kernel (TPU target; interpret-mode
+                     on CPU for validation),
+  * ``sharded``    — edge partitions over a device mesh, one collective per
+                     superstep (``core/distributed.py::ShardedBackend``).
 
 Sparsity gating (DESIGN.md §3): on the tile backends the frontier is NOT
 applied as a dense pre-mask of x (that costs O(C·V) per superstep and
@@ -21,10 +35,20 @@ from __future__ import annotations
 from typing import Optional, Union
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.graph import BlockSparse, Graph
 from repro.core.semiring import Semiring
 from repro.kernels import frontier, ref
+
+
+def _trace_state_clean() -> bool:
+    import jax.core
+
+    try:
+        return bool(jax.core.trace_state_clean())
+    except AttributeError:  # pragma: no cover - very old/new jax
+        return True
 
 
 def block_activity(bs: BlockSparse, mask) -> jnp.ndarray:
@@ -47,6 +71,200 @@ def block_activity(bs: BlockSparse, mask) -> jnp.ndarray:
     return valid & f.reshape(nb, b).any(-1)[bs.src_ids]
 
 
+class PropagateBackend:
+    """Protocol: one physical plan for one propagation view.
+
+    Subclasses own whatever prepared form of the adjacency they need and
+    implement ``propagate``; the engine treats them uniformly (DESIGN.md
+    §2/§6).  ``name`` is the stable spec string ``make_backend`` accepts.
+    """
+
+    name = "?"
+
+    def propagate(self, sr: Semiring, x: jnp.ndarray, frontier=None) -> jnp.ndarray:
+        raise NotImplementedError
+
+
+class CooBackend(PropagateBackend):
+    """Segment-reduction over the destination-sorted COO view.
+
+    With ``gather_edges`` set and a frontier given, reduces over padded
+    chunks of the ACTIVE edge subset via the graph's CSR view instead —
+    exact for any frontier size (DESIGN.md §3).
+    """
+
+    name = "coo"
+
+    def __init__(self, graph: Graph, *, gather_edges: Optional[int] = None,
+                 gate: bool = True):
+        self.graph = graph
+        self.gather_edges = gather_edges
+        self.gate = bool(gate)
+
+    def propagate(self, sr, x, frontier=None):
+        if self.gate and self.gather_edges and frontier is not None:
+            return ref.propagate_coo_gated(
+                self.graph, sr, x, frontier, int(self.gather_edges)
+            )
+        return ref.propagate_coo(self.graph, sr, x, frontier)
+
+
+class _TileBackend(PropagateBackend):
+    """Shared plumbing for the block-sparse plans.
+
+    The backend owns its tile tables *per semiring* (a table encodes
+    exactly one add-identity, DESIGN.md §2).  ``tables`` may be a single
+    ``BlockSparse`` (used for every semiring — the caller asserts one
+    semiring ever flows through this view), a prebuilt ``{sr.name: tiles}``
+    dict, or None; missing entries are built lazily from the graph unless
+    ``strict`` (the functional ``propagate`` path keeps strict=True so a
+    backend A/B can never silently rebuild what the caller meant to pass).
+    """
+
+    def __init__(self, graph: Graph, *, tables=None, block: int = 128,
+                 gate: bool = True, strict: bool = False):
+        self.graph = graph
+        self.block = int(block)
+        self.gate = bool(gate)
+        self.strict = bool(strict)
+        self._shared = tables if isinstance(tables, BlockSparse) else None
+        self.tables: dict = dict(tables) if isinstance(tables, dict) else {}
+
+    def table_for(self, sr: Semiring) -> BlockSparse:
+        if self._shared is not None:
+            return self._shared
+        t = self.tables.get(sr.name)
+        if t is None:
+            if self.strict:
+                raise ValueError(
+                    f"no block-sparse table for semiring '{sr.name}': build one "
+                    "per semiring with Graph.to_blocks(block, sr.add_id)"
+                )
+            t = self.graph.to_blocks(
+                self.block, sr.add_id, dtype=np.asarray(self.graph.w).dtype
+            )
+            # Only cache when built OUTSIDE a trace: a table built during a
+            # jit trace holds that trace's constants and would leak into
+            # later dispatches.  The engine pre-warms tables via a discovery
+            # pass so engine use never hits the in-trace (uncached) path.
+            if _trace_state_clean():
+                self.tables[sr.name] = t
+        return t
+
+    def propagate(self, sr, x, frontier=None):
+        bs = self.table_for(sr)
+        lead = x.shape[:-1]
+        flat = x.reshape((-1, x.shape[-1]))
+        mflat = None
+        if frontier is not None:
+            mflat = jnp.broadcast_to(frontier, x.shape).reshape(flat.shape)
+        if not self.gate:
+            # dense baseline: pre-mask x over the full (C, V) slab, no tile
+            # skipping — the very cost the gated path removes.
+            if mflat is not None:
+                flat = jnp.where(mflat, flat, jnp.asarray(sr.add_id, x.dtype))
+                mflat = None
+            active = None
+        else:
+            active = block_activity(bs, mflat)
+        out = self._run(bs, sr, flat, mflat, active)
+        return out.reshape(lead + (x.shape[-1],))
+
+    def _run(self, bs, sr, flat, mflat, active):
+        raise NotImplementedError
+
+
+class BlocksRefBackend(_TileBackend):
+    name = "blocks_ref"
+
+    def _run(self, bs, sr, flat, mflat, active):
+        return ref.propagate_blocks_ref(bs, sr, flat, mask=mflat, active=active)
+
+
+class PallasBackend(_TileBackend):
+    name = "pallas"
+
+    def __init__(self, graph: Graph, *, interpret: bool = True, **kw):
+        super().__init__(graph, **kw)
+        self.interpret = bool(interpret)
+
+    def _run(self, bs, sr, flat, mflat, active):
+        return frontier.propagate_blocks(
+            bs, sr, flat, mask=mflat, active=active, interpret=self.interpret
+        )
+
+
+class CallableBackend(PropagateBackend):
+    """Adapter for a user-supplied ``(sr, x, frontier) -> y`` callable (the
+    engine's ``propagate_override`` escape hatch)."""
+
+    name = "callable"
+
+    def __init__(self, fn):
+        self.fn = fn
+
+    def propagate(self, sr, x, frontier=None):
+        return self.fn(sr, x, frontier)
+
+
+def make_backend(
+    spec: Union[str, PropagateBackend],
+    graph: Graph,
+    *,
+    blocks: Optional[Union[BlockSparse, dict]] = None,
+    block: int = 128,
+    gate: bool = True,
+    gather_edges: Optional[int] = None,
+    interpret: bool = True,
+    strict_tables: bool = False,
+    mesh=None,
+    mesh_axis: Optional[str] = None,
+    partition: str = "dst",
+) -> PropagateBackend:
+    """Resolve a backend spec to a ``PropagateBackend`` owning ``graph``.
+
+    ``spec`` may already be a backend instance (returned as-is) or one of
+    the plan names in the module docstring.  ``strict_tables`` forbids the
+    tile backends from lazily building missing tables (the honesty rule of
+    the functional path); the engine leaves it off so tile tables are built
+    on demand per semiring.  ``sharded`` needs ``mesh`` (and shards over
+    ``mesh_axis``, default the mesh's last axis).
+    """
+    if isinstance(spec, PropagateBackend):
+        return spec
+    if spec == "coo":
+        return CooBackend(graph, gather_edges=gather_edges, gate=gate)
+    if spec == "coo_gated":
+        return CooBackend(graph, gather_edges=int(gather_edges or 512), gate=True)
+    if spec in ("blocks_ref", "pallas"):
+        if blocks is None and strict_tables:
+            # A silent COO fallback (or a silently rebuilt table) here would
+            # invalidate any backend A/B comparison.
+            raise ValueError(
+                f"backend '{spec}' needs a block-sparse adjacency: build one "
+                "with Graph.to_blocks(block, sr.add_id) and pass blocks="
+            )
+        kw = dict(tables=blocks, block=block, gate=gate, strict=strict_tables)
+        if spec == "pallas":
+            return PallasBackend(graph, interpret=interpret, **kw)
+        return BlocksRefBackend(graph, **kw)
+    if spec == "sharded":
+        from repro.core.distributed import ShardedBackend, ShardedGraph
+
+        if mesh is None:
+            raise ValueError(
+                "backend 'sharded' needs mesh= (a jax Mesh whose shard axis "
+                "divides |V|; see Graph.padded)"
+            )
+        axis = mesh_axis or mesh.axis_names[-1]
+        n_parts = int(mesh.shape[axis])
+        sg = graph if isinstance(graph, ShardedGraph) else ShardedGraph(
+            graph, n_parts, partition=partition
+        )
+        return ShardedBackend(sg, mesh, axis)
+    raise ValueError(f"unknown propagation backend {spec!r}")
+
+
 def propagate(
     graph: Graph,
     sr: Semiring,
@@ -54,60 +272,38 @@ def propagate(
     frontier_mask: Optional[jnp.ndarray] = None,
     *,
     blocks: Optional[Union[BlockSparse, dict]] = None,
-    backend: str = "coo",
+    backend: Union[str, PropagateBackend] = "coo",
     interpret: bool = True,
     gate: bool = True,
     gather_edges: Optional[int] = None,
+    mesh=None,
+    mesh_axis: Optional[str] = None,
+    partition: str = "dst",
 ) -> jnp.ndarray:
     """One superstep of combined message propagation. x: (..., V).
 
+    Functional convenience over :func:`make_backend` for fixpoint jobs and
+    tests; long-lived callers (the engine) hold backend objects instead so
+    prepared data (tile tables, edge partitions) persists across calls.
+    In particular ``backend='sharded'`` re-partitions the edges and
+    re-jits its shard_map PER CALL here — for anything repeated, hold a
+    backend from ``make_backend`` (or ``make_propagate_sharded``) instead.
     ``blocks`` may be a dict keyed by semiring name (programs mixing
-    semirings on one view, e.g. Hub² indexing, need one tile table per
-    add-identity).  ``gate=False`` disables sparsity gating (dense
-    baseline for the ``sparsity`` benchmark A/B).  ``gather_edges`` (coo
-    only) reduces over chunks of the active-edge subset instead of all E
-    when a frontier is given — exact for any frontier size.
+    semirings on one view need one tile table per add-identity); a tile
+    backend without a matching table refuses rather than rebuilding.
+    ``gather_edges`` (coo only) reduces over chunks of the active-edge
+    subset instead of all E when a frontier is given.
     """
-    if isinstance(blocks, dict):
-        blocks = blocks.get(sr.name)
-        if blocks is None and backend != "coo":
-            raise ValueError(
-                f"no block-sparse table for semiring '{sr.name}': build one "
-                "per semiring with Graph.to_blocks(block, sr.add_id)"
-            )
-    if backend == "coo":
-        if gate and gather_edges and frontier_mask is not None:
-            return ref.propagate_coo_gated(
-                graph, sr, x, frontier_mask, int(gather_edges)
-            )
-        return ref.propagate_coo(graph, sr, x, frontier_mask)
-    if blocks is None:
-        # A silent COO fallback here would invalidate any backend A/B
-        # comparison (the benchmark harness relies on this being honest).
-        raise ValueError(
-            f"backend '{backend}' needs a block-sparse adjacency: build one "
-            "with Graph.to_blocks(block, sr.add_id) and pass blocks="
-        )
-    lead = x.shape[:-1]
-    flat = x.reshape((-1, x.shape[-1]))
-    mflat = None
-    if frontier_mask is not None:
-        mflat = jnp.broadcast_to(frontier_mask, x.shape).reshape(flat.shape)
-    if not gate:
-        # dense baseline: pre-mask x over the full (C, V) slab, no tile
-        # skipping — the very cost the gated path removes.
-        if mflat is not None:
-            flat = jnp.where(mflat, flat, jnp.asarray(sr.add_id, x.dtype))
-            mflat = None
-        active = None
-    else:
-        active = block_activity(blocks, mflat)
-    if backend == "blocks_ref":
-        out = ref.propagate_blocks_ref(blocks, sr, flat, mask=mflat, active=active)
-    elif backend == "pallas":
-        out = frontier.propagate_blocks(
-            blocks, sr, flat, mask=mflat, active=active, interpret=interpret
-        )
-    else:
-        raise ValueError(backend)
-    return out.reshape(lead + (x.shape[-1],))
+    be = make_backend(
+        backend,
+        graph,
+        blocks=blocks,
+        interpret=interpret,
+        gate=gate,
+        gather_edges=gather_edges,
+        strict_tables=True,
+        mesh=mesh,
+        mesh_axis=mesh_axis,
+        partition=partition,
+    )
+    return be.propagate(sr, x, frontier_mask)

@@ -31,6 +31,15 @@ def make_mesh(shape: tuple, axes: tuple):
         return jax.make_mesh(shape, axes)
 
 
+def host_device_mesh(n: Optional[int] = None, axis: str = "w"):
+    """1-D mesh over the live devices — the sharded engine's default shape
+    (``QuegelEngine(mesh=host_device_mesh())``).  On CPU, force multiple
+    host devices with XLA_FLAGS=--xla_force_host_platform_device_count=N
+    *before* importing jax."""
+    n = n or len(jax.devices())
+    return make_mesh((n,), (axis,))
+
+
 def elastic_mesh(min_model: int = 4):
     """Build the largest (data, model) mesh from the *live* device list —
     jobs resume after losing hosts by rebuilding the mesh and resharding

@@ -159,7 +159,55 @@ def bench_tables(path: str) -> str:
                 f"{sp['barrier_reduction_k8']:.2f}x fewer barriers than k=1 "
                 f"(identical qid→result maps, checked in-run).",
             ]
+    sh = bench.get("sharded")
+    if sh:
+        meta = sh.get("meta", {})
+        lines += [
+            "",
+            f"## Sharded engine (DESIGN.md §6): mesh super-rounds "
+            f"({meta.get('devices', '?')} devices"
+            + (", quick)" if meta.get("quick") else ")"),
+            "",
+            "| workload | partition | mesh | rounds/s | queries/s | "
+            "coll bytes/round |",
+            "|---|---|---|---|---|---|",
+        ]
+        for wl, cells in sh.items():
+            if wl == "meta":
+                continue
+            base = cells.get("single")
+            if base:
+                lines.append(
+                    f"| {wl} | — | 1 (single) | "
+                    f"{base['super_rounds_per_sec']:.1f} | "
+                    f"{base['queries_per_sec']:.1f} | 0 |"
+                )
+            for part in ("dst", "src"):
+                for wname, m in cells.get(part, {}).items():
+                    coll = m.get("collective", {})
+                    lines.append(
+                        f"| {wl} | {part} | {wname.removeprefix('w')} | "
+                        f"{m['super_rounds_per_sec']:.1f} | "
+                        f"{m['queries_per_sec']:.1f} | "
+                        f"{fmt_bytes(coll.get('round_total_bytes', 0))} |"
+                    )
+        lines += [
+            "",
+            "Collective bytes are the modeled per-device wire cost per round "
+            "(state gather at round entry + one collective per propagate per "
+            "superstep; src all-reduce ≈ 2× the dst all-gather payload) — "
+            "results are asserted identical to the single-device engine "
+            "in-run.",
+        ]
     return "\n".join(lines)
+
+
+def fmt_bytes(b: float) -> str:
+    if b >= 2**20:
+        return f"{b/2**20:.1f}MiB"
+    if b >= 2**10:
+        return f"{b/2**10:.1f}KiB"
+    return f"{b:.0f}B"
 
 
 def main():

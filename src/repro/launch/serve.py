@@ -69,6 +69,7 @@ class SlotServer:
         # the slot-table cache: leading axis C (batch axis of serve_step)
         self.cache = T.init_cache(cfg, capacity, max_len, dtype=jnp.float32)
         self._step = jax.jit(self._round_fn)
+        self._prefill = jax.jit(self._prefill_fn)
 
     # -------------------------------------------------------------- round
     def _round_fn(self, params, cache, tokens, pos, live):
@@ -77,18 +78,39 @@ class SlotServer:
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return nxt, cache
 
-    def _prefill_slot(self, slot: int, prompt: np.ndarray):
-        """Admit: run the prompt through the cache token by token.
+    def _prefill_fn(self, params, cache, toks, length, slot, base_pos):
+        """Whole-prompt prefill for one slot as a single jitted call.
 
-        A production server prefills with one chunked call; on this CPU
-        container token-stepping keeps the jitted graph count at one.
+        ``toks`` is the prompt padded to max_len; the in-dispatch loop runs
+        exactly ``length`` steps (dynamic fori_loop bound, so padding costs
+        nothing), writing the admitted slot's cache at positions 0..length-1
+        while every other slot is masked to a harmless rewrite of its
+        ``base_pos`` entry (the same write the next decode step redoes with
+        real data).  One dispatch per admission, one compile total —
+        replacing the per-token dispatch + whole-(C, ...)-cache rewrite per
+        prompt token of the pre-refactor path.
         """
-        for i, t in enumerate(prompt):
-            tok = jnp.zeros((self.C, 1), jnp.int32).at[slot, 0].set(int(t))
-            pos = jnp.asarray(self._pos_vec())
-            pos = pos.at[slot].set(i)
-            _, self.cache = self._step(self.params, self.cache, tok, pos,
-                                       jnp.asarray(self._live))
+        onehot = jnp.arange(self.C, dtype=jnp.int32) == slot
+
+        def body(i, cache):
+            tok = jnp.where(onehot, toks[i], 0)[:, None]
+            pos = jnp.where(onehot, i, base_pos).astype(jnp.int32)
+            _, cache = T.serve_step(params, self.cfg, cache, tok, pos)
+            return cache
+
+        return jax.lax.fori_loop(0, length, body, cache)
+
+    def _prefill_slot(self, slot: int, prompt: np.ndarray):
+        toks = np.zeros((self.max_len,), np.int32)
+        toks[: len(prompt)] = prompt
+        self.cache = self._prefill(
+            self.params,
+            self.cache,
+            jnp.asarray(toks),
+            jnp.asarray(len(prompt), jnp.int32),
+            jnp.asarray(slot, jnp.int32),
+            jnp.asarray(self._pos_vec()),
+        )
         self._pos[slot] = len(prompt)
         self._last_tok[slot] = int(prompt[-1])
 

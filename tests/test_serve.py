@@ -86,6 +86,42 @@ def test_shared_rounds_fewer_than_serial(setup):
     assert rounds(4) < rounds(1)
 
 
+def test_prefill_one_call_tokens_unchanged(setup):
+    """Whole-prompt masked prefill (one jitted call per admission) must not
+    change any request's generated tokens vs the full-context reference —
+    including prompts prefilled while other slots are mid-decode."""
+    import jax.numpy as jnp
+
+    cfg, params = setup
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab, n, dtype=np.int32) for n in (5, 3, 8, 4)]
+    srv = SlotServer(cfg, params, capacity=2, max_len=48)
+    for rid, p in enumerate(prompts):
+        srv.submit(Request(rid, p, max_new_tokens=5))
+    res = srv.run_until_drained()
+    for rid, p in enumerate(prompts):
+        toks = list(p)
+        want = []
+        for _ in range(5):
+            logits = T.forward(params, cfg, {"tokens": jnp.asarray([toks])})
+            nxt = int(jnp.argmax(logits[0, -1]))
+            want.append(nxt)
+            toks.append(nxt)
+        assert res[rid].tolist() == want, rid
+
+
+def test_prefill_is_one_dispatch_per_admission(setup):
+    cfg, params = setup
+    srv = SlotServer(cfg, params, capacity=2, max_len=48)
+    calls = []
+    orig = srv._prefill
+    srv._prefill = lambda *a: (calls.append(1), orig(*a))[1]
+    for r in _reqs(cfg, 3, seed=9, max_new=3):
+        srv.submit(r)
+    srv.run_until_drained()
+    assert len(calls) == 3  # exactly one prefill dispatch per admission
+
+
 def test_eos_frees_slot(setup):
     cfg, params = setup
     srv = SlotServer(cfg, params, capacity=1, max_len=48)
