@@ -610,6 +610,183 @@ def bench_sparsity(quick=False):
     RESULTS.setdefault("sparsity", {})["json"] = out
 
 
+# ------------------------------------------------------------- serving
+def bench_serving(quick=False):
+    """Scheduler A/B on a mixed light/heavy query workload (DESIGN.md §9).
+
+    The convoy experiment: heavy queries (corner-to-corner PPSP on a grid,
+    dozens of supersteps) are submitted AHEAD of many light ones (adjacent
+    pairs, 1-2 supersteps) against a small capacity.  fifo — the paper's
+    admission rule — makes the lights wait behind the convoy; sjf (by
+    declared superstep budget), deadline (EDF) and priority admit them
+    first.  Per scheduler: wall time, qps, p50/p95 light-query latency,
+    heavy p95, mean slot occupancy — with qid->result maps asserted
+    IDENTICAL across schedulers (admission order must never change
+    results).  A second sub-table measures the opt-in result cache on a
+    repeated-query workload (Quegel's interactive console regime).
+
+    Merged into BENCH_quegel.json under ``serving``; the acceptance
+    number is ``light_p95_speedup`` for sjf/deadline vs fifo at equal
+    throughput.
+    """
+    import jax
+
+    from repro.apps.ppsp import make_bfs_engine
+    from repro.core.graph import grid_terrain
+
+    rows = 14 if quick else 26
+    cols = 16 if quick else 30
+    g, _ = grid_terrain(rows, cols, seed=31)
+    C = 4
+    n_heavy = 3 if quick else 4
+    n_light = 12 if quick else 28
+    rng = np.random.default_rng(32)
+    # heavy: opposite corners of the grid (row-major ids) — ~rows+cols
+    # supersteps each; light: horizontal neighbors — 1 superstep.
+    heavy = [
+        (int(rng.integers(0, cols // 2)),
+         g.n_real - 1 - int(rng.integers(0, cols // 2)))
+        for _ in range(n_heavy)
+    ]
+    light_base = rng.integers(0, g.n_real - 2, n_light)
+    light = list(dict.fromkeys(
+        (int(v), int(v) + 1) for v in light_base if (int(v) + 1) % cols != 0
+    )) or [(0, 1)]
+    budget_heavy = 4 * (rows + cols)   # way above the true cost: no eviction
+    budget_light = 16
+    workload = [("heavy", p, budget_heavy, 1e6, 5) for p in heavy] + [
+        ("light", p, budget_light, 1.0, 0) for p in light
+    ]
+
+    out: dict = {
+        "meta": {
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "quick": bool(quick),
+            "capacity": C,
+            "n_heavy": len(heavy),
+            "n_light": len(light),
+        },
+        "schedulers": {},
+    }
+
+    def run_sched(name, reps):
+        """Median-of-reps cell (one engine, reps drains of the workload):
+        walltime latencies are noisy at the ms scale, so each cell also
+        carries deterministic ROUND-INDEX latencies (the super-round in
+        which each query completed — pure scheduling, no clock)."""
+        eng = make_bfs_engine(g, capacity=C, scheduler=name)
+        _warm(eng, [jnp.asarray(p, jnp.int32) for p in (heavy[0], light[0])])
+        cells, maps = [], []
+        for _ in range(reps):
+            _reset_stats(eng)
+            eng._results.clear()
+            kinds, idx_of = {}, {}
+            t0 = time.perf_counter()
+            for i, (kind, p, budget, deadline, prio) in enumerate(workload):
+                qid = eng.submit(jnp.asarray(p, jnp.int32), budget=budget,
+                                 deadline=deadline, priority=prio)
+                kinds[qid] = kind
+                idx_of[qid] = i
+            done_t: dict = {}
+            done_round: dict = {}
+            rnd = 0
+            while eng.runtime.pending() or eng.runtime.live.any():
+                out = eng.run_round()
+                now = time.perf_counter()
+                rnd += 1
+                for qid, _ in out:
+                    done_t[qid] = now - t0
+                    done_round[qid] = rnd
+            wall = time.perf_counter() - t0
+            st = eng.stats
+            assert st.queries_done == len(workload), name
+            assert st.timeouts == 0, name  # budgets are estimates here
+            lat = lambda kind, d: [d[q] for q in d if kinds[q] == kind]
+            cells.append(dict(
+                wall_s=wall,
+                queries_per_sec=len(workload) / wall,
+                super_rounds=st.super_rounds,
+                light_p50_s=float(np.percentile(lat("light", done_t), 50)),
+                light_p95_s=float(np.percentile(lat("light", done_t), 95)),
+                heavy_p95_s=float(np.percentile(lat("heavy", done_t), 95)),
+                light_p95_rounds=float(
+                    np.percentile(lat("light", done_round), 95)
+                ),
+                heavy_p95_rounds=float(
+                    np.percentile(lat("heavy", done_round), 95)
+                ),
+                mean_occupancy=float(np.mean(st.slot_occupancy)),
+            ))
+            maps.append({
+                idx_of[qid]: {k: np.asarray(v).tolist() for k, v in r.items()}
+                for qid, r in eng._results.items()
+            })
+        assert all(m == maps[0] for m in maps[1:]), name
+        cell = sorted(cells, key=lambda c: c["light_p95_s"])[len(cells) // 2]
+        return cell, maps[0]
+
+    reps = 3 if quick else 5
+    base_map = None
+    for name in ("fifo", "priority", "sjf", "deadline"):
+        cell, res_map = run_sched(name, reps)
+        if base_map is None:
+            base_map = res_map
+        cell["results_match_fifo"] = res_map == base_map
+        assert cell["results_match_fifo"], (
+            f"scheduler {name} changed query results"
+        )
+        out["schedulers"][name] = cell
+        emit("serving", f"{name}_wall_s", cell["wall_s"])
+        emit("serving", f"{name}_qps", cell["queries_per_sec"])
+        emit("serving", f"{name}_light_p95_s", cell["light_p95_s"])
+        emit("serving", f"{name}_mean_occupancy", cell["mean_occupancy"])
+    fifo_p95 = out["schedulers"]["fifo"]["light_p95_s"]
+    out["light_p95_speedup"] = {
+        name: fifo_p95 / out["schedulers"][name]["light_p95_s"]
+        for name in ("priority", "sjf", "deadline")
+    }
+    for name, x in out["light_p95_speedup"].items():
+        emit("serving", f"light_p95_speedup_{name}", x)
+    if not quick:
+        # acceptance: sjf or deadline must beat fifo on light p95 at equal
+        # throughput (quick/CI runs only assert result-set identity above —
+        # toy walltimes are too noisy to gate on)
+        assert max(out["light_p95_speedup"]["sjf"],
+                   out["light_p95_speedup"]["deadline"]) > 1.0
+
+    # ---------------- result cache on a repeated-query workload ----------
+    reps = 2 if quick else 3
+    qs = [jnp.asarray(p, jnp.int32) for p in light]  # deduped above
+    eng_nc = make_bfs_engine(g, capacity=C)
+    eng_c = make_bfs_engine(g, capacity=C, result_cache=256)
+    for e in (eng_nc, eng_c):
+        # warm with queries DISJOINT from qs so the cache engine's first
+        # pass over qs is all misses (heavy pairs never reappear)
+        _warm(e, [jnp.asarray(p, jnp.int32) for p in heavy[:2]])
+        _reset_stats(e)
+    cache: dict = {}
+    for tag, eng in (("off", eng_nc), ("on", eng_c)):
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            for q in qs:
+                eng.submit(q)
+            eng.run_until_drained()
+        cache[tag] = dict(
+            wall_s=time.perf_counter() - t0,
+            rounds=eng.stats.rounds,
+            cache_hits=eng.stats.cache_hits,
+        )
+    assert cache["on"]["cache_hits"] == (reps - 1) * len(qs)
+    cache["speedup"] = cache["off"]["wall_s"] / cache["on"]["wall_s"]
+    out["cache"] = cache
+    emit("serving", "cache_hits", cache["on"]["cache_hits"])
+    emit("serving", "cache_speedup", cache["speedup"])
+
+    _merge_bench_json({"serving": out})
+    RESULTS.setdefault("serving", {})["json"] = out
+
+
 # ------------------------------------------------------------- sharded
 def bench_sharded(quick=False):
     """Mesh-sharded super-rounds (DESIGN.md §6).
@@ -747,6 +924,7 @@ def bench_kernels(quick=False):
 TABLES = {
     "hotpath": bench_hotpath,
     "sparsity": bench_sparsity,
+    "serving": bench_serving,
     "sharded": bench_sharded,
     "table2": table2_interactive,
     "table3": table3_bfs_vs_bibfs,

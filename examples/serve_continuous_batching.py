@@ -57,6 +57,16 @@ def main():
     same = all(np.array_equal(r1[k], r8[k]) for k in r1)
     print(f"== outputs identical across capacities: {same}")
 
+    # schedulers ride the shared SlotRuntime (DESIGN.md §9): sjf admits the
+    # shortest declared jobs first; over-long prompts are REJECTED up front
+    sv = SlotServer(cfg, params, capacity=1, max_len=64, scheduler="sjf")
+    sv.submit(Request(0, reqs[0].prompt, max_new_tokens=24, budget=24))
+    sv.submit(Request(1, reqs[1].prompt, max_new_tokens=4, budget=4))
+    sv.submit(Request(2, reqs[2].prompt, max_new_tokens=80))  # > max_len
+    sv.run_until_drained()
+    print(f"== sjf statuses: {sv.statuses} ({sv.stats.rejected} rejected; "
+          "short job admitted first)")
+
 
 if __name__ == "__main__":
     main()

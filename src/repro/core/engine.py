@@ -22,6 +22,14 @@ active frontier.  The pre-refactor path (per-query admission dispatches,
 live readback before every round, undonated copies) is preserved under
 ``legacy=True`` as the benchmark baseline.
 
+The slot LIFECYCLE (queue, admission, liveness mirror, retirement,
+stats, drain) lives in ``core/runtime.py::SlotRuntime``, shared with the
+LM ``SlotServer`` (DESIGN.md §9); the engine implements only the
+device-side ``SlotProgram`` hooks below.  Through the runtime the engine
+inherits pluggable admission schedulers (fifo/priority/sjf/deadline),
+per-query superstep budgets with TIMEOUT eviction, and an opt-in result
+cache for repeated queries.
+
 Propagation is pluggable (DESIGN.md §2/§6): the engine holds one
 ``kernels/ops.py::PropagateBackend`` per named view ('default', 'rev', ...)
 and never branches on the physical plan — COO segment ops, block tiles,
@@ -49,7 +57,7 @@ Data taxonomy (paper §3.2) maps as:
 from __future__ import annotations
 
 import dataclasses
-import time
+import math
 from typing import Any, Callable, Optional
 
 import jax
@@ -57,6 +65,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import Graph
+from repro.core.runtime import (
+    DONE, QueryTimeoutError, RoundOutcome, SlotProgram, SlotRuntime,
+    SlotStats)
 from repro.core.semiring import Semiring
 from repro.kernels import ops
 
@@ -117,29 +128,26 @@ class VertexProgram:
 
 
 @dataclasses.dataclass
-class EngineStats:
-    super_rounds: int = 0
-    barriers: int = 0  # == super_rounds: one sync per round by construction
-    queries_done: int = 0
-    supersteps_total: int = 0
-    round_times: list = dataclasses.field(default_factory=list)
-    # per-query submit->result latency, appended at completion (bench: p50/p95)
-    query_latencies: list = dataclasses.field(default_factory=list)
+class EngineStats(SlotStats):
+    """Shared lifecycle counters (SlotStats) under the engine's names.
+
+    ``super_rounds`` and ``barriers`` both read the runtime's round
+    counter — one sync per round by construction (DESIGN.md §3)."""
+
     # per-round active frontier vertex count, only when track_frontier=True
     # (costs one extra readback per round — diagnostics, not the hot path)
     frontier_active: list = dataclasses.field(default_factory=list)
 
     @property
-    def wall_time(self) -> float:
-        return float(sum(self.round_times))
+    def super_rounds(self) -> int:
+        return self.rounds
 
-    def latency_percentile(self, q: float) -> float:
-        if not self.query_latencies:
-            return float("nan")
-        return float(np.percentile(self.query_latencies, q))
+    @property
+    def barriers(self) -> int:
+        return self.rounds
 
 
-class QuegelEngine:
+class QuegelEngine(SlotProgram):
     """Superstep-sharing scheduler (paper §3).
 
     capacity  : the paper's C — max queries in flight per super-round.
@@ -189,6 +197,15 @@ class QuegelEngine:
     track_frontier : record per-round active frontier counts in
                 ``EngineStats.frontier_active`` (extra readback; off the
                 hot path) — requires the program to define ``frontier_of``.
+    scheduler : admission policy (DESIGN.md §9) — 'fifo' (default, the
+                paper's behavior), 'priority', 'sjf', 'deadline', or a
+                ``runtime.Scheduler`` instance.  Changes only WHICH
+                queued queries share the next super-round, never their
+                results.
+    result_cache : LRU size for the opt-in result cache — repeated
+                queries (canonicalized+hashed pytrees) are answered from
+                host memory without touching the device.  None (default)
+                disables it.
     """
 
     def __init__(
@@ -214,6 +231,8 @@ class QuegelEngine:
         mesh: Any = None,
         mesh_axis: Optional[str] = None,
         partition: str = "dst",
+        scheduler: Any = "fifo",
+        result_cache: Optional[int] = None,
     ):
         """``propagate_override`` maps a view name ('default', 'rev', ...)
         to a callable (semiring, x, frontier) -> y — wrapped in a
@@ -309,20 +328,37 @@ class QuegelEngine:
         if donate == "auto":
             donate = jax.default_backend() not in ("cpu",)
         self.donate = bool(donate)
-        self._queue: list[tuple[int, Any]] = []
-        self._next_qid = 0
-        self._results: dict[int, Any] = {}
-        self._slot_qid: dict[int, int] = {}
-        self._submit_t: dict[int, float] = {}
-        # Host mirror of slot liveness: updated from the same done-readback
-        # every round already pays, so admission never touches the device.
-        self._live_mask = np.zeros(self.capacity, dtype=bool)
-        self.stats = EngineStats()
+        # Queue, admission, liveness mirror, retirement, stats and drain
+        # all live in the shared SlotRuntime (DESIGN.md §9); this class is
+        # the device-side SlotProgram.
+        self.runtime = SlotRuntime(
+            self, self.capacity, scheduler=scheduler, stats=EngineStats(),
+            cache_size=result_cache,
+        )
         self._round_args: tuple = ()
         self._collective_model: Optional[dict] = None
         if example_query is None:
             raise ValueError("example_query required to shape the slot table")
         self._build(example_query)
+
+    @property
+    def stats(self) -> EngineStats:
+        return self.runtime.stats
+
+    @stats.setter
+    def stats(self, value) -> None:
+        self.runtime.stats = value
+
+    @property
+    def _results(self) -> dict:
+        """qid -> extracted result (the runtime's map; kept as the
+        historical attribute name for tests/benchmarks)."""
+        return self.runtime.results
+
+    @property
+    def status(self) -> dict:
+        """qid -> DONE | TIMEOUT | REJECTED (see core/runtime.py)."""
+        return self.runtime.status
 
     # ------------------------------------------------------------ plumbing
     def _propagate(self, sr: Semiring, x, frontier=None, which: str = "default"):
@@ -665,122 +701,130 @@ class QuegelEngine:
             round_total_bytes=state + self.steps_per_round * per_step,
         )
 
+    # ------------------------------------------- SlotProgram (device side)
+    def slot_round(self, admitted: dict[int, Any]) -> RoundOutcome:
+        """One super-round for the runtime: advance every live slot, fusing
+        the batched admission of ``admitted`` ({slot: staged query}) into
+        the same dispatch.  The done/step readback below is THE barrier —
+        one device->host sync per super-round.
+
+        Legacy mode preserves the pre-overhaul structure for the A/B
+        baseline: a liveness readback before the round (the extra sync the
+        overhaul removed) and one admission dispatch per query.
+        """
+        if self.legacy:
+            # The pre-overhaul round paid two extra device->host liveness
+            # syncs: free-slot discovery before admission, and the
+            # any-live check after it.  Keep both so the A/B baseline
+            # stays faithful (DESIGN.md §3).
+            _ = np.asarray(self._slots["live"])
+            for slot, q in admitted.items():
+                self._slots = self._admit(self._slots, slot, q)
+            _ = np.asarray(self._slots["live"]).any()
+            self._slots = self._super_round(self._slots)
+        elif admitted:
+            C = self.capacity
+            admit_mask = np.zeros((C,), bool)
+            by_slot = [self._proto_q_np] * C
+            for slot, q in admitted.items():
+                admit_mask[slot] = True
+                by_slot[slot] = q
+            queries = jax.tree.map(lambda *xs: np.stack(xs), *by_slot)
+            self._slots = self._round_admit(
+                self._slots, admit_mask, queries, *self._round_args
+            )
+        else:
+            self._slots = self._round(self._slots, *self._round_args)
+        return RoundOutcome(
+            done=np.asarray(self._slots["done"]),
+            steps=np.asarray(self._slots["step"]),
+        )
+
+    def slot_collect(self, slots: list[int]) -> list[Any]:
+        """Results for retiring slots: ONE vmapped dispatch extracts every
+        slot, rows sliced host-side (results are small Q-data); legacy
+        extracts per slot, as the pre-overhaul engine did."""
+        if self.legacy:
+            return [
+                jax.tree.map(np.asarray, self._extract(self._slots, int(s)))
+                for s in slots
+            ]
+        all_res = jax.tree.map(np.asarray, self._extract_all(self._slots))
+        return [
+            jax.tree.map(lambda tab: tab[int(s)], all_res) for s in slots
+        ]
+
+    def slot_evict(self, slots: list[int]) -> None:
+        """Budget-exhausted queries (TIMEOUT): clear device liveness so the
+        slot stops advancing and is free for re-admission.  Off the hot
+        path — eviction is the paper's console kill, not a per-round op."""
+        live = self._slots["live"].at[jnp.asarray(slots, jnp.int32)].set(False)
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            live = jax.device_put(live, NamedSharding(self.mesh, P(None)))
+        self._slots = dict(self._slots, live=live)
+
+    def slot_observe(self) -> None:
+        if self._frontier_count is not None:
+            self.stats.frontier_active.append(
+                int(self._frontier_count(self._slots))
+            )
+
     # -------------------------------------------------------------- client
-    def submit(self, query) -> int:
-        """Append a query to the queue (paper: console or batch file).
+    def submit(
+        self,
+        query,
+        *,
+        priority: int = 0,
+        deadline: float = math.inf,
+        budget: int = 0,
+    ) -> int:
+        """Queue a query (paper: console or batch file).  ``priority`` /
+        ``deadline`` / ``budget`` feed the runtime's scheduler and TIMEOUT
+        eviction (DESIGN.md §9); all default to "no policy".
 
         Query content is staged host-side (numpy) so batched admission can
         stack it without device round-trips; jit converts on dispatch.
         """
-        qid = self._next_qid
-        self._next_qid += 1
-        self._queue.append((qid, jax.tree.map(np.asarray, query)))
-        self._submit_t[qid] = time.perf_counter()
-        return qid
-
-    def _free_slots(self) -> list[int]:
-        """Slots available for admission.  Legacy mode reads liveness back
-        from the device (the extra pre-round sync the overhaul removed);
-        the fused path serves it from the host mirror for free."""
-        if self.legacy:
-            live = np.asarray(self._slots["live"])
-        else:
-            live = self._live_mask
-        return [i for i in range(self.capacity) if not live[i]]
-
-    def _any_live(self) -> bool:
-        if self.legacy:
-            return bool(np.asarray(self._slots["live"]).any())
-        return bool(self._live_mask.any())
+        return self.runtime.submit(
+            jax.tree.map(np.asarray, query),
+            priority=priority, deadline=deadline, budget=budget,
+        )
 
     def run_round(self) -> list[tuple[int, Any]]:
         """One super-round: admit from queue, advance all live slots one
-        superstep, collect finished queries.  Returns [(qid, result)].
-
-        Fused mode is one dispatch (admission scatter + vmapped superstep,
-        slot table donated) followed by one device->host sync; legacy mode
-        is one dispatch per admitted query plus the round, with an extra
-        liveness readback up front.
-        """
-        t0 = time.perf_counter()
-        # admission (paper: fetch as many queries as capacity permits);
-        # slot choice happens host-side in both modes.
-        free = self._free_slots()
-        admitted: dict[int, Any] = {}
-        while free and self._queue:
-            slot = free.pop()
-            qid, q = self._queue.pop(0)
-            admitted[slot] = q
-            self._slot_qid[slot] = qid
-            self._live_mask[slot] = True
-        if self.legacy:
-            for slot, q in admitted.items():
-                self._slots = self._admit(self._slots, slot, q)
-            if not np.asarray(self._slots["live"]).any():
-                return []
-            self._slots = self._super_round(self._slots)
-        else:
-            if not self._live_mask.any():
-                return []
-            if admitted:
-                C = self.capacity
-                admit_mask = np.zeros((C,), bool)
-                by_slot = [self._proto_q_np] * C
-                for slot, q in admitted.items():
-                    admit_mask[slot] = True
-                    by_slot[slot] = q
-                queries = jax.tree.map(lambda *xs: np.stack(xs), *by_slot)
-                self._slots = self._round_admit(
-                    self._slots, admit_mask, queries, *self._round_args
-                )
-            else:
-                self._slots = self._round(self._slots, *self._round_args)
-        # THE barrier: one device->host sync per super-round
-        done = np.asarray(self._slots["done"])
-        steps = np.asarray(self._slots["step"])
-        self._live_mask &= ~done
-        t_done = time.perf_counter()
-        out = []
-        done_slots = np.nonzero(done)[0]
-        all_res = None
-        if done_slots.size and not self.legacy:
-            # one vmapped dispatch extracts every slot; slice rows host-side
-            all_res = jax.tree.map(np.asarray, self._extract_all(self._slots))
-        for slot in done_slots:
-            qid = self._slot_qid[int(slot)]
-            if all_res is not None:
-                res = jax.tree.map(lambda tab: tab[int(slot)], all_res)
-            else:
-                res = jax.tree.map(
-                    np.asarray, self._extract(self._slots, int(slot))
-                )
-            self._results[qid] = res
-            self.stats.queries_done += 1
-            self.stats.supersteps_total += int(steps[slot])
-            sub = self._submit_t.pop(qid, None)
-            if sub is not None:
-                self.stats.query_latencies.append(t_done - sub)
-            out.append((qid, res))
-        self.stats.super_rounds += 1
-        self.stats.barriers += 1
-        if self._frontier_count is not None:
-            self.stats.frontier_active.append(int(self._frontier_count(self._slots)))
-        self.stats.round_times.append(time.perf_counter() - t0)
-        return out
+        superstep, collect finished queries.  Returns [(qid, result)] for
+        queries that COMPLETED (voted done) this round — budget-evicted
+        TIMEOUT queries are excluded (their partial results land only in
+        ``_results``/``run_until_drained`` with ``status[qid]`` marking
+        them), so this list never mixes final and partial answers."""
+        return [
+            (qid, res)
+            for qid, res, status in self.runtime.run_round() or []
+            if status == DONE
+        ]
 
     def run_until_drained(self, max_rounds: int = 100_000) -> dict[int, Any]:
         """Batch-querying mode (paper scenario ii)."""
-        rounds = 0
-        while (self._queue or self._any_live()) and rounds < max_rounds:
-            self.run_round()
-            rounds += 1
-        return dict(self._results)
+        return self.runtime.run_until_drained(max_rounds)
 
-    def query(self, q, max_rounds: int = 100_000):
-        """Interactive mode (paper scenario i): submit and wait."""
-        qid = self.submit(q)
+    def query(self, q, max_rounds: int = 100_000, **submit_kw):
+        """Interactive mode (paper scenario i): submit and wait.
+
+        Raises ``QueryTimeoutError`` if the query is still unfinished after
+        ``max_rounds`` super-rounds (submit with a superstep ``budget`` to
+        retire runaways as TIMEOUT with a partial result instead)."""
+        qid = self.submit(q, **submit_kw)
         rounds = 0
         while qid not in self._results and rounds < max_rounds:
-            self.run_round()
+            self.runtime.run_round()
             rounds += 1
+        if qid not in self._results:
+            raise QueryTimeoutError(
+                f"query {qid} still unfinished after {max_rounds} "
+                f"super-rounds (capacity={self.capacity}, "
+                f"steps_per_round={self.steps_per_round}); raise max_rounds "
+                "or submit(..., budget=N) to evict it with a TIMEOUT status"
+            )
         return self._results[qid]

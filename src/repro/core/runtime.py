@@ -1,0 +1,442 @@
+"""SlotRuntime: the shared slot-table serving substrate (DESIGN.md §9).
+
+Quegel's execution model — a table of C slots, each holding one in-flight
+query, advanced together one superstep per super-round — is not specific
+to graph queries: LM decode under continuous batching is the identical
+lifecycle (DESIGN.md §4).  Before this module, ``QuegelEngine``
+(core/engine.py) and ``SlotServer`` (launch/serve.py) each carried their
+own copy of that lifecycle (queue, free-slot admission, host liveness
+mirror, retirement, stats, drain loop).  ``SlotRuntime`` owns it exactly
+once; the two front ends keep only their device-side halves behind the
+small ``SlotProgram`` protocol:
+
+    slot_validate(query) -> None | (status, result)   pre-admission reject
+    slot_round(admitted) -> RoundOutcome              ONE fused dispatch
+    slot_collect(slots)  -> [result, ...]             extract retirees
+    slot_evict(slots)                                 kill device liveness
+    slot_observe()                                    per-round diagnostics
+
+The runtime never touches the device: admission is served from a host
+liveness mirror, and everything it learns about a round comes from the
+``RoundOutcome`` the program distilled from its single device->host sync.
+The hot-path invariants (one dispatch + one sync per round, donation,
+steps_per_round, mesh mode — DESIGN.md §3/§6) therefore live entirely in
+the program; the runtime adds policy on top:
+
+* **Schedulers** (paper §3.1 admits "as many queries as capacity
+  permits" but says nothing about *which*): ``fifo`` (default, the
+  paper's behavior), ``priority`` (user-supplied levels), ``sjf``
+  (shortest declared superstep budget first), ``deadline`` (earliest
+  deadline first).  Admission order is the only thing a scheduler
+  changes — results are policy-invariant.
+* **Superstep budgets with timeout eviction** — the paper's console
+  semantics for runaway queries: a query whose declared budget is
+  exhausted before it votes done retires with status ``TIMEOUT``
+  (partial result collected) instead of occupying its slot forever.
+* An opt-in **result cache**: canonicalize+hash the query pytree -> LRU
+  of extracted results, serving Quegel's repeated-query workload without
+  touching the device.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import hashlib
+import heapq
+import math
+import time
+from typing import Any, Optional
+
+import numpy as np
+
+# Terminal query statuses (``SlotRuntime.status[qid]``).
+DONE = "DONE"          # voted done; result extracted
+TIMEOUT = "TIMEOUT"    # superstep budget exhausted; evicted with partial result
+REJECTED = "REJECTED"  # failed slot_validate; never admitted
+
+
+class QueryTimeoutError(RuntimeError):
+    """An interactive query did not finish within its round allowance."""
+
+
+# --------------------------------------------------------------------- stats
+@dataclasses.dataclass
+class SlotStats:
+    """Lifecycle counters every slot-table front end shares.
+
+    ``rounds`` counts executed super-rounds (== barriers: one sync per
+    round by construction); ``supersteps_total`` accumulates the
+    per-query superstep counters of retired queries, so slot sharing
+    never changes it (paper §3.1).
+    """
+
+    rounds: int = 0
+    queries_done: int = 0
+    timeouts: int = 0
+    rejected: int = 0
+    cache_hits: int = 0
+    supersteps_total: int = 0
+    round_times: list = dataclasses.field(default_factory=list)
+    # per-query submit->result latency, appended at completion (bench: p50/p95)
+    query_latencies: list = dataclasses.field(default_factory=list)
+    # live slots per executed round (utilization; bench: mean occupancy)
+    slot_occupancy: list = dataclasses.field(default_factory=list)
+
+    @property
+    def wall_time(self) -> float:
+        return float(sum(self.round_times))
+
+    def latency_percentile(self, q: float) -> float:
+        if not self.query_latencies:
+            return float("nan")
+        return float(np.percentile(self.query_latencies, q))
+
+
+# ----------------------------------------------------------------- scheduler
+@dataclasses.dataclass
+class Ticket:
+    """One queued query plus its scheduling attributes."""
+
+    qid: int
+    query: Any
+    priority: int = 0         # lower = admitted sooner (priority scheduler)
+    deadline: float = math.inf  # earliest-deadline-first key
+    budget: int = 0           # declared superstep budget; 0 = unlimited.
+    # Doubles as the sjf job-size estimate and the TIMEOUT eviction bound.
+    submit_t: float = 0.0
+    seq: int = 0              # submission order; ties break FIFO
+
+
+class Scheduler:
+    """Admission-order policy over queued tickets.
+
+    Only the pop order differs between implementations; the runtime pops
+    exactly as many tickets as it has free slots, so a scheduler is the
+    whole answer to "which queries share the next super-round".
+    """
+
+    name = "base"
+
+    def push(self, ticket: Ticket) -> None:
+        raise NotImplementedError
+
+    def pop(self) -> Ticket:
+        raise NotImplementedError
+
+    def __len__(self) -> int:
+        raise NotImplementedError
+
+
+class FIFOScheduler(Scheduler):
+    """Submission order — the paper's admission rule, and the default.
+    A deque keeps admission O(1) however deep the queue gets."""
+
+    name = "fifo"
+
+    def __init__(self):
+        self._q: collections.deque[Ticket] = collections.deque()
+
+    def push(self, t: Ticket) -> None:
+        self._q.append(t)
+
+    def pop(self) -> Ticket:
+        return self._q.popleft()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+
+class _HeapScheduler(Scheduler):
+    """Key-ordered admission (O(log n)); FIFO among equal keys."""
+
+    def __init__(self):
+        self._h: list[tuple] = []
+
+    def key(self, t: Ticket):
+        raise NotImplementedError
+
+    def push(self, t: Ticket) -> None:
+        heapq.heappush(self._h, (self.key(t), t.seq, t))
+
+    def pop(self) -> Ticket:
+        return heapq.heappop(self._h)[-1]
+
+    def __len__(self) -> int:
+        return len(self._h)
+
+
+class PriorityScheduler(_HeapScheduler):
+    """User-supplied levels; lower ``priority`` is admitted first."""
+
+    name = "priority"
+
+    def key(self, t: Ticket):
+        return t.priority
+
+
+class SJFScheduler(_HeapScheduler):
+    """Shortest-job-first by declared superstep budget.  Light queries —
+    the paper's target workload — jump the convoy behind heavy ones;
+    undeclared (budget=0) queries sort last."""
+
+    name = "sjf"
+
+    def key(self, t: Ticket):
+        return t.budget if t.budget > 0 else math.inf
+
+
+class DeadlineScheduler(_HeapScheduler):
+    """Earliest-deadline-first."""
+
+    name = "deadline"
+
+    def key(self, t: Ticket):
+        return t.deadline
+
+
+SCHEDULERS = {
+    c.name: c
+    for c in (FIFOScheduler, PriorityScheduler, SJFScheduler, DeadlineScheduler)
+}
+
+
+def make_scheduler(spec) -> Scheduler:
+    """'fifo' | 'priority' | 'sjf' | 'deadline', a Scheduler subclass, or a
+    ready instance."""
+    if isinstance(spec, Scheduler):
+        return spec
+    if isinstance(spec, type) and issubclass(spec, Scheduler):
+        return spec()
+    if isinstance(spec, str) and spec in SCHEDULERS:
+        return SCHEDULERS[spec]()
+    raise ValueError(
+        f"unknown scheduler {spec!r}: expected one of {sorted(SCHEDULERS)}, "
+        "a Scheduler subclass, or an instance"
+    )
+
+
+# -------------------------------------------------------------- result cache
+def default_cache_key(query) -> str:
+    """Canonicalize a query pytree: structure + per-leaf dtype/shape/bytes."""
+    import jax
+
+    leaves, treedef = jax.tree.flatten(query)
+    h = hashlib.sha1(repr(treedef).encode())
+    for leaf in leaves:
+        arr = np.asarray(leaf)
+        h.update(str(arr.dtype).encode())
+        h.update(str(arr.shape).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+_MISS = object()
+
+
+class ResultCache:
+    """LRU of extracted results keyed by canonicalized query hash."""
+
+    def __init__(self, size: int):
+        if size < 1:
+            raise ValueError("result cache size must be >= 1")
+        self.size = int(size)
+        self._d: collections.OrderedDict[str, Any] = collections.OrderedDict()
+
+    def get(self, key: str):
+        if key not in self._d:
+            return _MISS
+        self._d.move_to_end(key)
+        return self._d[key]
+
+    def put(self, key: str, value) -> None:
+        self._d[key] = value
+        self._d.move_to_end(key)
+        while len(self._d) > self.size:
+            self._d.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+
+# ------------------------------------------------------------------ protocol
+@dataclasses.dataclass
+class RoundOutcome:
+    """What one executed round reports back — both arrays come from the
+    program's single device->host sync (or host bookkeeping)."""
+
+    done: np.ndarray   # (C,) bool — live slots that finished this round
+    steps: np.ndarray  # (C,) int — cumulative supersteps of each slot's query
+
+
+class SlotProgram:
+    """Device-side half of the slot lifecycle (see module docstring).
+
+    ``slot_round`` receives ``admitted`` ({slot: query}) so admission can
+    stay fused into the round dispatch; on return the runtime retires
+    slots per ``RoundOutcome.done``, evicts budget-exhausted ones (via
+    ``slot_evict``) and collects results for both (``slot_collect``).
+    """
+
+    def slot_validate(self, query) -> Optional[tuple[str, Any]]:
+        """None to admit; (status, result) to reject without a slot."""
+        return None
+
+    def slot_round(self, admitted: dict[int, Any]) -> RoundOutcome:
+        raise NotImplementedError
+
+    def slot_collect(self, slots: list[int]) -> list[Any]:
+        raise NotImplementedError
+
+    def slot_evict(self, slots: list[int]) -> None:
+        """Clear device-side liveness for budget-evicted slots.  State must
+        survive until ``slot_collect`` (partial results)."""
+        return None
+
+    def slot_observe(self) -> None:
+        """Optional per-round diagnostics hook (e.g. frontier tracking)."""
+        return None
+
+    def cache_key(self, query) -> str:
+        return default_cache_key(query)
+
+
+# ------------------------------------------------------------------- runtime
+class SlotRuntime:
+    """Owns the query queue, admission, round loop, retirement and stats
+    for one slot table; the program owns the device."""
+
+    def __init__(
+        self,
+        program: SlotProgram,
+        capacity: int,
+        *,
+        scheduler: Any = "fifo",
+        stats: Optional[SlotStats] = None,
+        cache_size: Optional[int] = None,
+    ):
+        self.program = program
+        self.capacity = int(capacity)
+        self.scheduler = make_scheduler(scheduler)
+        self.stats = stats if stats is not None else SlotStats()
+        self.results: dict[int, Any] = {}
+        self.status: dict[int, str] = {}
+        # Host mirror of slot liveness: updated from the same RoundOutcome
+        # every round already pays, so admission never touches the device.
+        self.live = np.zeros(self.capacity, dtype=bool)
+        self.cache = ResultCache(cache_size) if cache_size else None
+        self._slot_ticket: dict[int, Ticket] = {}
+        self._qid_key: dict[int, str] = {}
+        self._next_qid = 0
+        self._seq = 0
+
+    # ------------------------------------------------------------- client
+    def submit(
+        self,
+        query,
+        *,
+        qid: Optional[int] = None,
+        priority: int = 0,
+        deadline: float = math.inf,
+        budget: int = 0,
+    ) -> int:
+        """Queue a query (paper: console or batch file).  ``budget`` is the
+        declared superstep budget: the sjf size estimate AND the TIMEOUT
+        eviction bound (0 = undeclared/unlimited)."""
+        if qid is None:
+            qid = self._next_qid
+            self._next_qid += 1
+        t = time.perf_counter()
+        if self.cache is not None:
+            key = self.program.cache_key(query)
+            hit = self.cache.get(key)
+            if hit is not _MISS:
+                self.results[qid] = hit
+                self.status[qid] = DONE
+                self.stats.cache_hits += 1
+                self.stats.queries_done += 1
+                self.stats.query_latencies.append(time.perf_counter() - t)
+                return qid
+            self._qid_key[qid] = key
+        self.scheduler.push(
+            Ticket(qid, query, int(priority), float(deadline), int(budget),
+                   submit_t=t, seq=self._seq)
+        )
+        self._seq += 1
+        return qid
+
+    def pending(self) -> int:
+        return len(self.scheduler)
+
+    def run_round(self) -> Optional[list[tuple[int, Any, str]]]:
+        """Admit + one program round + retire.  Returns the retired
+        [(qid, result, status)] — empty if the round completed nothing —
+        or None when there was nothing to run (no live slots, nothing
+        admissible)."""
+        t0 = time.perf_counter()
+        admitted: dict[int, Any] = {}
+        free = [i for i in range(self.capacity) if not self.live[i]]
+        while free and len(self.scheduler):
+            tk = self.scheduler.pop()
+            rej = self.program.slot_validate(tk.query)
+            if rej is not None:
+                status, res = rej
+                self.results[tk.qid] = res
+                self.status[tk.qid] = status
+                self.stats.rejected += 1
+                self._qid_key.pop(tk.qid, None)  # rejects never enter cache
+                continue
+            slot = free.pop()
+            admitted[slot] = tk.query
+            self._slot_ticket[slot] = tk
+            self.live[slot] = True
+        if not self.live.any():
+            return None
+        occupancy = int(self.live.sum())
+        out = self.program.slot_round(admitted)
+        t_done = time.perf_counter()
+        done = np.asarray(out.done)
+        steps = np.asarray(out.steps)
+        finished = [int(s) for s in np.nonzero(done & self.live)[0]]
+        evicted = [
+            s
+            for s in range(self.capacity)
+            if self.live[s]
+            and not done[s]
+            and self._slot_ticket[s].budget > 0
+            and int(steps[s]) >= self._slot_ticket[s].budget
+        ]
+        if evicted:
+            self.program.slot_evict(evicted)
+        retiring = finished + evicted
+        collected = self.program.slot_collect(retiring) if retiring else []
+        completed: list[tuple[int, Any, str]] = []
+        for slot, res in zip(retiring, collected):
+            tk = self._slot_ticket.pop(slot)
+            self.live[slot] = False
+            status = DONE if slot in finished else TIMEOUT
+            self.results[tk.qid] = res
+            self.status[tk.qid] = status
+            self.stats.supersteps_total += int(steps[slot])
+            if status == DONE:
+                self.stats.queries_done += 1
+                self.stats.query_latencies.append(t_done - tk.submit_t)
+                key = self._qid_key.pop(tk.qid, None)
+                if self.cache is not None and key is not None:
+                    self.cache.put(key, res)
+            else:
+                self.stats.timeouts += 1
+                self._qid_key.pop(tk.qid, None)
+            completed.append((tk.qid, res, status))
+        self.stats.rounds += 1
+        self.stats.slot_occupancy.append(occupancy)
+        self.program.slot_observe()
+        self.stats.round_times.append(time.perf_counter() - t0)
+        return completed
+
+    def run_until_drained(self, max_rounds: int = 100_000) -> dict[int, Any]:
+        """Batch-querying mode (paper scenario ii)."""
+        rounds = 0
+        while (len(self.scheduler) or self.live.any()) and rounds < max_rounds:
+            self.run_round()
+            rounds += 1
+        return dict(self.results)

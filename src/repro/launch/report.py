@@ -159,6 +159,47 @@ def bench_tables(path: str) -> str:
                 f"{sp['barrier_reduction_k8']:.2f}x fewer barriers than k=1 "
                 f"(identical qid→result maps, checked in-run).",
             ]
+    sv = bench.get("serving")
+    if sv:
+        meta = sv.get("meta", {})
+        lines += [
+            "",
+            f"## Serving (DESIGN.md §9): scheduler A/B, mixed light/heavy "
+            f"(C={meta.get('capacity', '?')}, {meta.get('n_heavy', '?')} heavy"
+            f" + {meta.get('n_light', '?')} light"
+            + (", quick)" if meta.get("quick") else ")"),
+            "",
+            "| scheduler | wall | q/s | light p50 | light p95 | heavy p95 | "
+            "light p95 (rounds) | mean occ |",
+            "|---|---|---|---|---|---|---|---|",
+        ]
+        for name, m in sv.get("schedulers", {}).items():
+            lines.append(
+                f"| {name} | {fmt_s(m['wall_s'])} | "
+                f"{m['queries_per_sec']:.0f} | {fmt_s(m['light_p50_s'])} | "
+                f"{fmt_s(m['light_p95_s'])} | {fmt_s(m['heavy_p95_s'])} | "
+                f"{m.get('light_p95_rounds', float('nan')):.0f} | "
+                f"{m['mean_occupancy']:.2f} |"
+            )
+        sp_ = sv.get("light_p95_speedup", {})
+        if sp_:
+            best = max(sp_, key=sp_.get)
+            lines += [
+                "",
+                "**Light-query p95 speedup vs fifo:** "
+                + ", ".join(f"{k} {v:.2f}x" for k, v in sp_.items())
+                + f" — best: {best} (identical qid→result maps across all "
+                "schedulers, checked in-run).",
+            ]
+        cache = sv.get("cache")
+        if cache:
+            lines += [
+                "",
+                f"**Result cache** (repeated-query workload): "
+                f"{cache['on']['cache_hits']} hits, "
+                f"{cache['on']['rounds']} vs {cache['off']['rounds']} rounds, "
+                f"**{cache['speedup']:.2f}x** wall.",
+            ]
     sh = bench.get("sharded")
     if sh:
         meta = sh.get("meta", {})

@@ -10,18 +10,31 @@ Requests are admitted from a queue as slots free up; a finished request
 Per-request state (the KV cache slice, position, generated tokens) is
 VQ-data: it lives in dense (C, ...) slabs indexed by slot, initialized at
 admission — the same layout the graph engine uses.
+
+The slot lifecycle itself (queue, admission, liveness mirror, retirement,
+stats, drain) is the shared ``core/runtime.py::SlotRuntime`` (DESIGN.md
+§9) — the same substrate ``QuegelEngine`` runs on — so this class is only
+the device-side ``SlotProgram``: prefill + decode + retirement decisions.
+Through the runtime it inherits pluggable admission schedulers
+(fifo/priority/sjf/deadline), per-request token budgets with TIMEOUT
+eviction, and per-request statuses: a request whose
+``prompt + max_new_tokens`` exceeds ``max_len`` is REJECTED up front
+(empty result, counted in ``ServeStats.rejected``) instead of being
+silently recorded as an empty generation.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Callable, Optional
+import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.runtime import (
+    REJECTED, RoundOutcome, SlotProgram, SlotRuntime, SlotStats)
 from repro.models import transformer as T
 
 
@@ -31,15 +44,25 @@ class Request:
     prompt: np.ndarray  # (L,) int32
     max_new_tokens: int = 32
     eos_id: int = -1  # -1: never; else stop on this token
+    # scheduling attributes (DESIGN.md §9): admission priority level,
+    # earliest-deadline-first key, and a declared token budget (sjf size
+    # estimate + TIMEOUT eviction bound; 0 = undeclared).
+    priority: int = 0
+    deadline: float = math.inf
+    budget: int = 0
 
 
 @dataclasses.dataclass
-class ServeStats:
-    rounds: int = 0
+class ServeStats(SlotStats):
+    """Shared lifecycle counters (SlotStats) under the server's names.
+    ``rejected`` counts requests refused at admission (prompt +
+    max_new_tokens > max_len); ``timeouts`` counts budget evictions."""
+
     tokens_generated: int = 0
-    requests_done: int = 0
-    slot_occupancy: list = dataclasses.field(default_factory=list)
-    round_times: list = dataclasses.field(default_factory=list)
+
+    @property
+    def requests_done(self) -> int:
+        return self.queries_done
 
     @property
     def tokens_per_s(self) -> float:
@@ -47,21 +70,22 @@ class ServeStats:
         return self.tokens_generated / t if t else 0.0
 
 
-class SlotServer:
+class SlotServer(SlotProgram):
     """Superstep-shared decode over a slot table of capacity C."""
 
     def __init__(self, cfg: ArchConfig, params, capacity: int = 8,
-                 max_len: int = 256, greedy: bool = True):
+                 max_len: int = 256, greedy: bool = True,
+                 scheduler="fifo", result_cache: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.C = capacity
         self.max_len = max_len
         self.greedy = greedy
-        self.queue: list[Request] = []
-        self.results: dict[int, np.ndarray] = {}
-        self.stats = ServeStats()
+        self.runtime = SlotRuntime(
+            self, capacity, scheduler=scheduler, stats=ServeStats(),
+            cache_size=result_cache,
+        )
         self._slot_req: dict[int, Request] = {}
-        self._live = np.zeros(capacity, bool)
         self._pos = np.zeros(capacity, np.int32)  # next position to write
         self._remaining = np.zeros(capacity, np.int32)
         self._generated: list[list[int]] = [[] for _ in range(capacity)]
@@ -70,6 +94,24 @@ class SlotServer:
         self.cache = T.init_cache(cfg, capacity, max_len, dtype=jnp.float32)
         self._step = jax.jit(self._round_fn)
         self._prefill = jax.jit(self._prefill_fn)
+
+    @property
+    def stats(self) -> ServeStats:
+        return self.runtime.stats
+
+    @stats.setter
+    def stats(self, value) -> None:
+        self.runtime.stats = value
+
+    @property
+    def results(self) -> dict:
+        """rid -> generated tokens (int32 array; empty when REJECTED)."""
+        return self.runtime.results
+
+    @property
+    def statuses(self) -> dict:
+        """rid -> DONE | TIMEOUT | REJECTED (see core/runtime.py)."""
+        return self.runtime.status
 
     # -------------------------------------------------------------- round
     def _round_fn(self, params, cache, tokens, pos, live):
@@ -116,37 +158,33 @@ class SlotServer:
 
     def _pos_vec(self):
         # dead slots decode at position 0 harmlessly (results discarded)
-        return np.where(self._live, self._pos, 0).astype(np.int32)
+        return np.where(self.runtime.live, self._pos, 0).astype(np.int32)
 
-    # ------------------------------------------------------------- client
-    def submit(self, req: Request):
-        self.queue.append(req)
+    # ------------------------------------------- SlotProgram (device side)
+    def slot_validate(self, req: Request):
+        if len(req.prompt) + req.max_new_tokens > self.max_len:
+            return REJECTED, np.asarray([], np.int32)
+        return None
 
-    def run_round(self):
-        """Admission + one shared decode step + retirement (one barrier)."""
-        t0 = time.perf_counter()
-        for slot in range(self.C):
-            if not self._live[slot] and self.queue:
-                req = self.queue.pop(0)
-                if len(req.prompt) + req.max_new_tokens > self.max_len:
-                    self.results[req.rid] = np.asarray([], np.int32)
-                    continue
-                self._live[slot] = True  # live before prefill pos writes
-                self._prefill_slot(slot, req.prompt)
-                self._slot_req[slot] = req
-                self._remaining[slot] = req.max_new_tokens
-                self._generated[slot] = []
-        if not self._live.any():
-            return False
+    def slot_round(self, admitted: dict[int, Request]) -> RoundOutcome:
+        """Prefill newly admitted prompts (one jitted call each), then ONE
+        shared decode dispatch for all live slots; done/steps come from the
+        host-side token bookkeeping (EOS / max_new_tokens / max_len)."""
+        for slot, req in admitted.items():
+            self._prefill_slot(slot, req.prompt)
+            self._slot_req[slot] = req
+            self._remaining[slot] = req.max_new_tokens
+            self._generated[slot] = []
+        live = self.runtime.live
         tokens = jnp.asarray(self._last_tok[:, None])
         pos = jnp.asarray(self._pos_vec() - 1)  # position of last written token
         nxt, self.cache = self._step(self.params, self.cache, tokens, pos,
-                                     jnp.asarray(self._live))
+                                     jnp.asarray(live))
         nxt = np.asarray(nxt)
-        self.stats.rounds += 1
-        self.stats.slot_occupancy.append(int(self._live.sum()))
+        done = np.zeros(self.C, bool)
+        steps = np.zeros(self.C, np.int32)
         for slot in range(self.C):
-            if not self._live[slot]:
+            if not live[slot]:
                 continue
             tok = int(nxt[slot])
             self._generated[slot].append(tok)
@@ -155,24 +193,38 @@ class SlotServer:
             self._last_tok[slot] = tok
             self._pos[slot] += 1
             req = self._slot_req[slot]
-            done = (
+            done[slot] = (
                 self._remaining[slot] <= 0
                 or tok == req.eos_id
                 or self._pos[slot] >= self.max_len
             )
-            if done:
-                self.results[req.rid] = np.asarray(self._generated[slot], np.int32)
-                self.stats.requests_done += 1
-                self._live[slot] = False
-        self.stats.round_times.append(time.perf_counter() - t0)
-        return True
+            steps[slot] = len(self._generated[slot])
+        return RoundOutcome(done=done, steps=steps)
+
+    def slot_collect(self, slots: list[int]) -> list:
+        return [np.asarray(self._generated[s], np.int32) for s in slots]
+
+    def cache_key(self, req: Request) -> str:
+        import hashlib
+
+        h = hashlib.sha1(np.asarray(req.prompt, np.int32).tobytes())
+        h.update(f"{req.max_new_tokens},{req.eos_id}".encode())
+        return h.hexdigest()
+
+    # ------------------------------------------------------------- client
+    def submit(self, req: Request):
+        self.runtime.submit(
+            req, qid=req.rid,
+            priority=req.priority, deadline=req.deadline, budget=req.budget,
+        )
+
+    def run_round(self) -> bool:
+        """Admission + one shared decode step + retirement (one barrier).
+        False when there was nothing to run."""
+        return self.runtime.run_round() is not None
 
     def run_until_drained(self, max_rounds: int = 100_000):
-        r = 0
-        while (self.queue or self._live.any()) and r < max_rounds:
-            self.run_round()
-            r += 1
-        return dict(self.results)
+        return self.runtime.run_until_drained(max_rounds)
 
 
 def main():
@@ -185,22 +237,27 @@ def main():
     ap.add_argument("--capacity", type=int, default=4)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--scheduler", default="fifo",
+                    choices=["fifo", "priority", "sjf", "deadline"])
     ap.add_argument("--reduced", action="store_true", default=True)
     args = ap.parse_args()
 
     cfg = reduced(get_arch(args.arch))
     params = T.init_params(cfg, jax.random.PRNGKey(0))
-    srv = SlotServer(cfg, params, capacity=args.capacity, max_len=96)
+    srv = SlotServer(cfg, params, capacity=args.capacity, max_len=96,
+                     scheduler=args.scheduler)
     rng = np.random.default_rng(0)
     for rid in range(args.requests):
         plen = int(rng.integers(4, 12))
         srv.submit(Request(rid, rng.integers(0, cfg.vocab, plen, dtype=np.int32),
-                           max_new_tokens=args.max_new))
+                           max_new_tokens=args.max_new,
+                           budget=args.max_new))
     res = srv.run_until_drained()
     print(f"served {len(res)} requests, {srv.stats.tokens_generated} tokens, "
-          f"{srv.stats.rounds} shared rounds, "
+          f"{srv.stats.rounds} shared rounds ({args.scheduler}), "
           f"{srv.stats.tokens_per_s:.1f} tok/s, "
-          f"mean occupancy {np.mean(srv.stats.slot_occupancy):.2f}/{args.capacity}")
+          f"mean occupancy {np.mean(srv.stats.slot_occupancy):.2f}/{args.capacity}, "
+          f"{srv.stats.rejected} rejected")
     return 0
 
 

@@ -1,0 +1,278 @@
+"""SlotRuntime (core/runtime.py): schedulers, budgets/TIMEOUT eviction,
+result cache, stats edge cases, and re-home parity (DESIGN.md §9)."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps.ppsp import make_bfs_engine
+from repro.core.engine import EngineStats
+from repro.core.runtime import (
+    DONE, REJECTED, TIMEOUT, DeadlineScheduler, FIFOScheduler,
+    PriorityScheduler, QueryTimeoutError, ResultCache, SJFScheduler,
+    SlotStats, Ticket, make_scheduler)
+
+
+def _pairs(graph, n_pairs, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        (int(a), int(b))
+        for a, b in rng.integers(0, graph.n_real, (n_pairs, 2))
+    ]
+
+
+# ------------------------------------------------------- scheduler ordering
+def _tickets():
+    # (qid, priority, deadline, budget) — seq is submission order
+    rows = [
+        (0, 5, 9.0, 100),
+        (1, 1, 3.0, 5),
+        (2, 5, 1.0, 0),    # undeclared budget -> sjf sorts it last
+        (3, 1, math.inf, 5),
+    ]
+    return [
+        Ticket(qid, query=None, priority=p, deadline=d, budget=b, seq=i)
+        for i, (qid, p, d, b) in enumerate(rows)
+    ]
+
+
+@pytest.mark.parametrize(
+    "sched_cls,want",
+    [
+        (FIFOScheduler, [0, 1, 2, 3]),
+        (PriorityScheduler, [1, 3, 0, 2]),  # level, then FIFO within level
+        (SJFScheduler, [1, 3, 0, 2]),       # budget 5,5,100,undeclared
+        (DeadlineScheduler, [2, 1, 0, 3]),  # 1.0, 3.0, 9.0, inf
+    ],
+)
+def test_scheduler_pop_order(sched_cls, want):
+    s = sched_cls()
+    for t in _tickets():
+        s.push(t)
+    got = [s.pop().qid for _ in range(len(want))]
+    assert got == want
+    assert len(s) == 0
+
+
+def test_make_scheduler_specs():
+    assert isinstance(make_scheduler("fifo"), FIFOScheduler)
+    assert isinstance(make_scheduler("sjf"), SJFScheduler)
+    assert isinstance(make_scheduler(DeadlineScheduler), DeadlineScheduler)
+    inst = PriorityScheduler()
+    assert make_scheduler(inst) is inst
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        make_scheduler("lifo")
+
+
+# -------------------------------------------- end-to-end policy invariance
+@pytest.mark.parametrize("scheduler", ["fifo", "priority", "sjf", "deadline"])
+def test_schedulers_identical_results(small_directed, scheduler):
+    """Admission order must never change any query's result — only who
+    shares which super-round (mid-stream submission included)."""
+    g = small_directed
+    pairs = _pairs(g, 9, seed=5)
+    base = make_bfs_engine(g, capacity=3)
+    eng = make_bfs_engine(g, capacity=3, scheduler=scheduler)
+    rng = np.random.default_rng(6)
+    out = {}
+    for name, e in (("fifo", base), (scheduler, eng)):
+        qids = {}
+        for i, p in enumerate(pairs[:6]):
+            qids[e.submit(jnp.asarray(p, jnp.int32),
+                          priority=int(rng.integers(0, 3)),
+                          deadline=float(i),
+                          budget=20 + i)] = p
+        e.run_round()
+        for p in pairs[6:]:
+            qids[e.submit(jnp.asarray(p, jnp.int32), budget=30)] = p
+        res = e.run_until_drained()
+        out[name] = {qids[q]: int(res[q]["dist"]) for q in qids}
+        assert e.stats.queries_done == len(pairs)
+        assert all(s == DONE for s in e.status.values())
+    assert out["fifo"] == out[scheduler]
+
+
+def test_priority_admission_order(small_directed):
+    """Capacity 1: the high-priority (lower level) query completes first
+    even when submitted last."""
+    g = small_directed
+    eng = make_bfs_engine(g, capacity=1, scheduler="priority")
+    lo = eng.submit(jnp.asarray((0, 5), jnp.int32), priority=9)
+    hi = eng.submit(jnp.asarray((3, 9), jnp.int32), priority=0)
+    order = []
+    while len(eng.runtime.scheduler) or eng.runtime.live.any():
+        order += [qid for qid, _ in eng.run_round()]
+    assert order == [hi, lo]
+
+
+def test_deadline_admission_order(small_directed):
+    g = small_directed
+    eng = make_bfs_engine(g, capacity=1, scheduler="deadline")
+    late = eng.submit(jnp.asarray((0, 5), jnp.int32), deadline=100.0)
+    soon = eng.submit(jnp.asarray((3, 9), jnp.int32), deadline=1.0)
+    order = []
+    while len(eng.runtime.scheduler) or eng.runtime.live.any():
+        order += [qid for qid, _ in eng.run_round()]
+    assert order == [soon, late]
+
+
+# ------------------------------------------------- budgets / TIMEOUT / query()
+def test_budget_eviction_times_out(small_directed):
+    """A query whose superstep budget is exhausted retires as TIMEOUT with
+    a partial result; other queries are unaffected and the slot is reused."""
+    g = small_directed
+    eng = make_bfs_engine(g, capacity=1)
+    doomed = eng.submit(jnp.asarray((0, 5), jnp.int32), budget=1)
+    fine = eng.submit(jnp.asarray((3, 9), jnp.int32))
+    res = eng.run_until_drained()
+    assert eng.status[doomed] == TIMEOUT
+    assert eng.status[fine] == DONE
+    assert eng.stats.timeouts == 1
+    assert eng.stats.queries_done == 1
+    # partial result was still extracted (BFS ran only 1 superstep)
+    assert set(res[doomed]) == set(res[fine])
+    ref = make_bfs_engine(g, capacity=1)
+    assert int(res[fine]["dist"]) == int(
+        ref.query(jnp.asarray((3, 9), jnp.int32))["dist"]
+    )
+
+
+def test_budget_eviction_multi_step_round(small_directed):
+    """Eviction composes with steps_per_round>1 (steps can jump past the
+    budget inside one fused round)."""
+    g = small_directed
+    eng = make_bfs_engine(g, capacity=2, steps_per_round=2)
+    doomed = eng.submit(jnp.asarray((0, 5), jnp.int32), budget=1)
+    eng.run_until_drained()
+    assert eng.status[doomed] == TIMEOUT
+    assert eng.stats.supersteps_total >= 2  # steps jumped past the budget
+
+
+def test_run_round_excludes_timeout_partials(small_directed):
+    """run_round() keeps its historical contract — only COMPLETED queries —
+    so callers never mistake a TIMEOUT partial for a final answer; evicted
+    queries surface via .status and the results map only."""
+    g = small_directed
+    eng = make_bfs_engine(g, capacity=1)
+    doomed = eng.submit(jnp.asarray((0, 5), jnp.int32), budget=1)
+    seen = []
+    while len(eng.runtime.scheduler) or eng.runtime.live.any():
+        seen += [qid for qid, _ in eng.run_round()]
+    assert doomed not in seen
+    assert eng.status[doomed] == TIMEOUT and doomed in eng._results
+
+
+def test_query_max_rounds_raises_descriptive(small_directed):
+    g = small_directed
+    eng = make_bfs_engine(g, capacity=1)
+    with pytest.raises(QueryTimeoutError, match="super-rounds"):
+        eng.query(jnp.asarray((0, 5), jnp.int32), max_rounds=0)
+    # the engine is still usable afterwards: the stuck query drains out
+    res = eng.run_until_drained()
+    assert len(res) == 1
+
+
+# ------------------------------------------------------------- result cache
+def test_result_cache_hits(small_directed):
+    g = small_directed
+    eng = make_bfs_engine(g, capacity=2, result_cache=8)
+    q = jnp.asarray((0, 5), jnp.int32)
+    a = eng.query(q)
+    rounds_after_first = eng.stats.rounds
+    b = eng.query(q)  # served host-side: no extra rounds
+    assert eng.stats.cache_hits == 1
+    assert eng.stats.rounds == rounds_after_first
+    assert eng.stats.queries_done == 2
+    np.testing.assert_array_equal(np.asarray(a["dist"]), np.asarray(b["dist"]))
+    # a different query is a miss
+    eng.query(jnp.asarray((3, 9), jnp.int32))
+    assert eng.stats.cache_hits == 1
+
+
+def test_result_cache_lru_eviction():
+    c = ResultCache(2)
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1  # refreshes a
+    c.put("c", 3)           # evicts b (LRU)
+    from repro.core.runtime import _MISS
+
+    assert c.get("b") is _MISS
+    assert c.get("a") == 1 and c.get("c") == 3
+    with pytest.raises(ValueError):
+        ResultCache(0)
+
+
+def test_timeout_results_not_cached(small_directed):
+    """Partial TIMEOUT results must never be served from the cache."""
+    g = small_directed
+    eng = make_bfs_engine(g, capacity=1, result_cache=8)
+    q = jnp.asarray((0, 5), jnp.int32)
+    doomed = eng.submit(q, budget=1)
+    eng.run_until_drained()
+    assert eng.status[doomed] == TIMEOUT
+    good = eng.query(q)  # re-runs fully, then caches
+    assert eng.stats.cache_hits == 0
+    ref = make_bfs_engine(g, capacity=1)
+    assert int(good["dist"]) == int(ref.query(q)["dist"])
+
+
+# ------------------------------------------------------------ stats behavior
+def test_stats_edge_cases():
+    for stats in (SlotStats(), EngineStats()):
+        assert math.isnan(stats.latency_percentile(50))
+        assert stats.wall_time == 0.0
+    from repro.launch.serve import ServeStats
+
+    sv = ServeStats()
+    assert sv.tokens_per_s == 0.0  # no rounds: no division by zero
+    assert sv.requests_done == 0
+    sv.query_latencies.append(0.25)
+    assert sv.latency_percentile(50) == sv.latency_percentile(95) == 0.25
+
+
+def test_engine_stats_aliases_and_occupancy(small_directed):
+    g = small_directed
+    eng = make_bfs_engine(g, capacity=2)
+    for p in _pairs(g, 5, seed=9):
+        eng.submit(jnp.asarray(p, jnp.int32))
+    eng.run_until_drained()
+    s = eng.stats
+    assert s.super_rounds == s.barriers == s.rounds > 0
+    assert len(s.slot_occupancy) == s.rounds
+    assert all(1 <= o <= 2 for o in s.slot_occupancy)
+    assert len(s.round_times) == s.rounds
+    assert len(s.query_latencies) == 5
+    assert s.latency_percentile(50) <= s.latency_percentile(95)
+
+
+def test_stats_parity_across_rehome(small_directed):
+    """The re-home invariant: fused and legacy engines — both now on
+    SlotRuntime — still report identical lifecycle counters on the same
+    workload (extends test_engine_hotpath's parity to the shared fields)."""
+    g = small_directed
+    pairs = _pairs(g, 10, seed=13)
+    stats = {}
+    for mode in ("fused", "legacy"):
+        eng = make_bfs_engine(g, capacity=4, legacy=(mode == "legacy"))
+        for p in pairs:
+            eng.submit(jnp.asarray(p, jnp.int32))
+        eng.run_until_drained()
+        s = eng.stats
+        stats[mode] = (
+            s.rounds, s.queries_done, s.supersteps_total, s.timeouts,
+            s.rejected, s.cache_hits, tuple(s.slot_occupancy),
+        )
+    assert stats["fused"] == stats["legacy"]
+
+
+def test_runtime_statuses_complete(small_directed):
+    """Every submitted query ends with exactly one terminal status."""
+    g = small_directed
+    eng = make_bfs_engine(g, capacity=2)
+    qids = [eng.submit(jnp.asarray(p, jnp.int32)) for p in _pairs(g, 6, seed=15)]
+    qids.append(eng.submit(jnp.asarray((0, 5), jnp.int32), budget=1))
+    eng.run_until_drained()
+    assert set(eng.status) == set(qids)
+    assert all(s in (DONE, TIMEOUT, REJECTED) for s in eng.status.values())

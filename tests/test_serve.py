@@ -122,6 +122,66 @@ def test_prefill_is_one_dispatch_per_admission(setup):
     assert len(calls) == 3  # exactly one prefill dispatch per admission
 
 
+def test_overlong_request_rejected_with_status(setup):
+    """prompt + max_new_tokens > max_len must be REJECTED up front —
+    explicit status + ServeStats.rejected, not a silently empty array."""
+    from repro.core.runtime import DONE, REJECTED
+
+    cfg, params = setup
+    srv = SlotServer(cfg, params, capacity=2, max_len=16)
+    ok = Request(0, np.asarray([1, 2, 3], np.int32), max_new_tokens=4)
+    bad = Request(1, np.asarray([1, 2, 3, 4, 5], np.int32), max_new_tokens=40)
+    srv.submit(ok)
+    srv.submit(bad)
+    res = srv.run_until_drained()
+    assert srv.statuses[0] == DONE and len(res[0]) == 4
+    assert srv.statuses[1] == REJECTED and len(res[1]) == 0
+    assert srv.stats.rejected == 1
+    assert srv.stats.requests_done == 1  # rejected requests don't count
+
+
+def test_server_budget_timeout(setup):
+    """A declared token budget below max_new_tokens evicts the request as
+    TIMEOUT with the tokens generated so far."""
+    from repro.core.runtime import TIMEOUT
+
+    cfg, params = setup
+    srv = SlotServer(cfg, params, capacity=1, max_len=48)
+    srv.submit(Request(0, np.asarray([1, 2, 3], np.int32),
+                       max_new_tokens=10, budget=4))
+    res = srv.run_until_drained()
+    assert srv.statuses[0] == TIMEOUT
+    assert len(res[0]) == 4
+    assert srv.stats.timeouts == 1
+
+
+def test_server_sjf_scheduler_orders_by_budget(setup):
+    """Under sjf, the shorter declared job is admitted (and so completes)
+    first at capacity 1; generated tokens are unchanged."""
+    cfg, params = setup
+    rng = np.random.default_rng(13)
+    long_p = rng.integers(0, cfg.vocab, 4, dtype=np.int32)
+    short_p = rng.integers(0, cfg.vocab, 4, dtype=np.int32)
+
+    def run(scheduler):
+        srv = SlotServer(cfg, params, capacity=1, max_len=48,
+                         scheduler=scheduler)
+        srv.submit(Request(0, long_p, max_new_tokens=9, budget=9))
+        srv.submit(Request(1, short_p, max_new_tokens=2, budget=2))
+        order = []
+        while srv.runtime.pending() or srv.runtime.live.any():
+            before = set(srv.results)
+            srv.run_round()
+            order += sorted(set(srv.results) - before)
+        return order, srv.run_until_drained()
+
+    fifo_order, fifo_res = run("fifo")
+    sjf_order, sjf_res = run("sjf")
+    assert fifo_order == [0, 1] and sjf_order == [1, 0]
+    for rid in (0, 1):
+        np.testing.assert_array_equal(fifo_res[rid], sjf_res[rid])
+
+
 def test_eos_frees_slot(setup):
     cfg, params = setup
     srv = SlotServer(cfg, params, capacity=1, max_len=48)
