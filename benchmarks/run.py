@@ -622,7 +622,11 @@ def bench_serving(quick=False):
     first.  Per scheduler: wall time, qps, p50/p95 light-query latency,
     heavy p95, mean slot occupancy — with qid->result maps asserted
     IDENTICAL across schedulers (admission order must never change
-    results).  A second sub-table measures the opt-in result cache on a
+    results).  A second sub-table stages arrivals (heavies occupy every
+    slot BEFORE the lights are submitted) and A/Bs non-preemptive vs
+    preemptive sjf: suspend/resume at round boundaries oversubscribes the
+    slot table and rescues light latency when admission order alone no
+    longer can.  A third measures the opt-in result cache on a
     repeated-query workload (Quegel's interactive console regime).
 
     Merged into BENCH_quegel.json under ``serving``; the acceptance
@@ -754,6 +758,101 @@ def bench_serving(quick=False):
         # toy walltimes are too noisy to gate on)
         assert max(out["light_p95_speedup"]["sjf"],
                    out["light_p95_speedup"]["deadline"]) > 1.0
+
+    # -------------- staged-arrival preemption (oversubscription) ---------
+    # The scheduler A/B above submits everything up front, so sjf fixes the
+    # convoy at ADMISSION time.  Here the heavies ARRIVE FIRST and occupy
+    # every slot before the lights are even submitted — admission-order
+    # scheduling can no longer help; only suspending a running heavy can.
+    # preemptive sjf (SRPT) suspends heavies at the next round boundary,
+    # oversubscribes the slot table (max_inflight > C), and resumes them
+    # after the lights drain — with qid->result maps asserted identical to
+    # the non-preemptive run in-run (suspend/resume parity, DESIGN.md §9).
+    def run_staged(preemptive, reps):
+        eng = make_bfs_engine(g, capacity=C, scheduler="sjf",
+                              preemptive=preemptive)
+        _warm(eng, [jnp.asarray(p, jnp.int32) for p in (heavy[0], light[0])])
+        cells, maps = [], []
+        for _ in range(reps):
+            _reset_stats(eng)
+            eng._results.clear()
+            kinds, idx_of = {}, {}
+            t0 = time.perf_counter()
+            for i, p in enumerate(heavy):
+                qid = eng.submit(jnp.asarray(p, jnp.int32),
+                                 budget=budget_heavy)
+                kinds[qid], idx_of[qid] = "heavy", i
+            eng.run_round()  # heavies take the slots before lights arrive
+            for i, p in enumerate(light):
+                qid = eng.submit(jnp.asarray(p, jnp.int32),
+                                 budget=budget_light)
+                kinds[qid], idx_of[qid] = "light", len(heavy) + i
+            done_t, done_round, rnd = {}, {}, 1
+            while eng.runtime.pending() or eng.runtime.live.any():
+                res = eng.run_round()
+                now = time.perf_counter()
+                rnd += 1
+                for qid, _ in res:
+                    done_t[qid] = now - t0
+                    done_round[qid] = rnd
+            st = eng.stats
+            assert st.queries_done == len(heavy) + len(light)
+            lat = lambda kind, d: [d[q] for q in d if kinds[q] == kind]
+            cells.append(dict(
+                wall_s=time.perf_counter() - t0,
+                light_p95_s=float(np.percentile(lat("light", done_t), 95)),
+                light_p95_rounds=float(
+                    np.percentile(lat("light", done_round), 95)
+                ),
+                heavy_p95_rounds=float(
+                    np.percentile(lat("heavy", done_round), 95)
+                ),
+                preemptions=st.preemptions,
+                resumes=st.resumes,
+                max_inflight=st.max_inflight,
+            ))
+            maps.append({
+                idx_of[qid]: {k: np.asarray(v).tolist() for k, v in r.items()}
+                for qid, r in eng._results.items()
+            })
+        assert all(m == maps[0] for m in maps[1:])
+        cell = sorted(cells, key=lambda c: c["light_p95_s"])[len(cells) // 2]
+        return cell, maps[0]
+
+    pre_reps = 3 if quick else 5
+    staged: dict = {}
+    staged["sjf"], base = run_staged(False, pre_reps)
+    staged["sjf_preemptive"], pre_map = run_staged(True, pre_reps)
+    assert pre_map == base, "preemption changed query results"
+    staged["sjf"]["results_match"] = staged["sjf_preemptive"]["results_match"] = True
+    # preemption must actually fire and oversubscribe the slot table...
+    assert staged["sjf_preemptive"]["preemptions"] > 0
+    assert staged["sjf_preemptive"]["max_inflight"] > C
+    assert staged["sjf"]["preemptions"] == 0
+    # ...and beat non-preemptive sjf on light latency.  Round-index p95 is
+    # deterministic (pure scheduling), so it gates even quick/CI runs.
+    staged["light_p95_rounds_speedup"] = (
+        staged["sjf"]["light_p95_rounds"]
+        / staged["sjf_preemptive"]["light_p95_rounds"]
+    )
+    staged["light_p95_speedup"] = (
+        staged["sjf"]["light_p95_s"]
+        / staged["sjf_preemptive"]["light_p95_s"]
+    )
+    assert staged["light_p95_rounds_speedup"] > 1.0
+    out["staged_preemption"] = staged
+    for name in ("sjf", "sjf_preemptive"):
+        c = staged[name]
+        emit("serving", f"staged_{name}_light_p95_s", c["light_p95_s"])
+        emit("serving", f"staged_{name}_light_p95_rounds",
+             c["light_p95_rounds"])
+        emit("serving", f"staged_{name}_max_inflight", c["max_inflight"])
+    emit("serving", "staged_preemptions",
+         staged["sjf_preemptive"]["preemptions"])
+    emit("serving", "staged_light_p95_rounds_speedup",
+         staged["light_p95_rounds_speedup"])
+    emit("serving", "staged_light_p95_speedup",
+         staged["light_p95_speedup"])
 
     # ---------------- result cache on a repeated-query workload ----------
     reps = 2 if quick else 3

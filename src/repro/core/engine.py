@@ -66,8 +66,8 @@ import numpy as np
 
 from repro.core.graph import Graph
 from repro.core.runtime import (
-    DONE, QueryTimeoutError, RoundOutcome, SlotProgram, SlotRuntime,
-    SlotStats)
+    DONE, QueryTimeoutError, ResumeAdmission, RoundOutcome, SlotProgram,
+    SlotRuntime, SlotStats)
 from repro.core.semiring import Semiring
 from repro.kernels import ops
 
@@ -206,6 +206,16 @@ class QuegelEngine(SlotProgram):
                 queries (canonicalized+hashed pytrees) are answered from
                 host memory without touching the device.  None (default)
                 disables it.
+    preemptive : round-boundary preemption (DESIGN.md §9, the paper's
+                console *suspend*): a waiting query that beats the
+                worst-ranked running query by ``preempt_margin`` suspends
+                it — state collected to host via ``slot_suspend``, slot
+                freed, query re-queued as a resume ticket with its
+                superstep accounting intact.  Requires a key-ordered
+                scheduler (priority/sjf/deadline); results are identical
+                to the non-preemptive run.
+    preempt_margin : how decisively a waiting key must beat a running rank
+                to trigger suspension (0.0 = any strict win).
     """
 
     def __init__(
@@ -233,6 +243,8 @@ class QuegelEngine(SlotProgram):
         partition: str = "dst",
         scheduler: Any = "fifo",
         result_cache: Optional[int] = None,
+        preemptive: bool = False,
+        preempt_margin: float = 0.0,
     ):
         """``propagate_override`` maps a view name ('default', 'rev', ...)
         to a callable (semiring, x, frontier) -> y — wrapped in a
@@ -333,7 +345,8 @@ class QuegelEngine(SlotProgram):
         # the device-side SlotProgram.
         self.runtime = SlotRuntime(
             self, self.capacity, scheduler=scheduler, stats=EngineStats(),
-            cache_size=result_cache,
+            cache_size=result_cache, preemptive=preemptive,
+            preempt_margin=preempt_margin,
         )
         self._round_args: tuple = ()
         self._collective_model: Optional[dict] = None
@@ -368,8 +381,10 @@ class QuegelEngine(SlotProgram):
         g, prog, C = self.graph, self.program, self.capacity
         proto_q = jax.tree.map(jnp.asarray, example_query)
         proto_state = prog.init(g, proto_q, self.index)
-        # host-side copy for cheap np.stack when batching admissions
+        # host-side copies for cheap np.stack when batching admissions
+        # (the state proto fills non-resuming rows of the resume payload)
         self._proto_q_np = jax.tree.map(np.asarray, proto_q)
+        self._proto_state_np = jax.tree.map(np.asarray, proto_state)
 
         def stack(proto):
             return jax.tree.map(lambda x: jnp.zeros((C,) + jnp.shape(x), jnp.asarray(x).dtype), proto)
@@ -413,6 +428,27 @@ class QuegelEngine(SlotProgram):
             slots["step"] = jnp.where(admit_mask, 0, slots["step"])
             slots["live"] = slots["live"] | admit_mask
             slots["done"] = slots["done"] & ~admit_mask
+            return slots
+
+        def admit_batch_resume(slots, admit_mask, queries, resume_mask,
+                               rstate, rsteps):
+            """Batched admission with suspended queries resuming alongside
+            fresh ones: fresh rows (admit_mask) run ``init``; resume rows
+            (resume_mask) restore the host-collected state and superstep
+            counter instead — suspension must be observationally
+            equivalent to never having been admitted, modulo the steps
+            already charged (DESIGN.md §9)."""
+            st = jax.vmap(lambda q: prog.init(g, q, self.index))(queries)
+            st = tree_where(resume_mask, rstate, st)
+            both = admit_mask | resume_mask
+            slots = dict(slots)
+            slots["state"] = tree_where(both, st, slots["state"])
+            slots["query"] = tree_where(both, queries, slots["query"])
+            slots["step"] = jnp.where(
+                resume_mask, rsteps, jnp.where(admit_mask, 0, slots["step"])
+            )
+            slots["live"] = slots["live"] | both
+            slots["done"] = slots["done"] & ~both
             return slots
 
         def make_super_round(prop):
@@ -509,10 +545,25 @@ class QuegelEngine(SlotProgram):
                 warm(sr)
         if self.legacy:
             self._admit = jax.jit(admit)
+
+            def admit_resume(slots, idx, query, state, steps):
+                slots = dict(slots)
+                slots["state"] = jax.tree.map(
+                    lambda tab, v: tab.at[idx].set(v), slots["state"], state
+                )
+                slots["query"] = jax.tree.map(
+                    lambda tab, v: tab.at[idx].set(v), slots["query"], query
+                )
+                slots["step"] = slots["step"].at[idx].set(steps)
+                slots["live"] = slots["live"].at[idx].set(True)
+                slots["done"] = slots["done"].at[idx].set(False)
+                return slots
+
+            self._admit_resume = jax.jit(admit_resume)
             legacy_round = make_super_round(self._propagate)
             self._super_round = jax.jit(lambda s: legacy_round(zero_done(s)))
         elif self.mesh is not None:
-            self._build_spmd(make_round_k, admit_batch)
+            self._build_spmd(make_round_k, admit_batch, admit_batch_resume)
         else:
             round_k = make_round_k(self._propagate)
             # Donating the slot table lets XLA alias every (C, V, ...) slab
@@ -522,6 +573,14 @@ class QuegelEngine(SlotProgram):
             self._round_admit = jax.jit(
                 lambda slots, admit_mask, queries: round_k(
                     admit_batch(slots, admit_mask, queries)
+                ),
+                donate_argnums=dn,
+            )
+            # separate entry so rounds with no resuming query keep the
+            # no-resume hot path (and its compiled trace) untouched
+            self._round_resume = jax.jit(
+                lambda slots, am, q, rm, rst, rsp: round_k(
+                    admit_batch_resume(slots, am, q, rm, rst, rsp)
                 ),
                 donate_argnums=dn,
             )
@@ -553,7 +612,7 @@ class QuegelEngine(SlotProgram):
             self._frontier_count = jax.jit(frontier_count)
 
     # ---------------------------------------------------------------- SPMD
-    def _build_spmd(self, make_round_k, admit_batch):
+    def _build_spmd(self, make_round_k, admit_batch, admit_batch_resume):
         """Compile the fused round as ONE shard_map over the mesh axis.
 
         V-sharded leaves (trailing dim == |V|) are all-gathered at round
@@ -628,6 +687,19 @@ class QuegelEngine(SlotProgram):
             rk = make_round_k(local_prop(parts))
             return scatter(rk(admit_batch(gather(slots), admit_mask, queries)))
 
+        def body_resume(slots, admit_mask, queries, resume_mask, rstate,
+                        rsteps, parts):
+            # resume state arrives replicated (host-collected full rows);
+            # admission happens on the gathered full-V table, and the exit
+            # scatter re-shards the restored V-partitioned leaves.
+            rk = make_round_k(local_prop(parts))
+            return scatter(rk(admit_batch_resume(
+                gather(slots), admit_mask, queries, resume_mask, rstate,
+                rsteps)))
+
+        state_specs = jax.tree.map(
+            lambda leaf: P(*([None] * jnp.ndim(leaf))), self._slots["state"]
+        )
         dn = (0,) if self.donate else ()
         self._round = jax.jit(
             _shard_map(
@@ -640,6 +712,15 @@ class QuegelEngine(SlotProgram):
             _shard_map(
                 body_admit, mesh,
                 in_specs=(slot_specs, P(None), query_specs, edge_specs),
+                out_specs=slot_specs,
+            ),
+            donate_argnums=dn,
+        )
+        self._round_resume = jax.jit(
+            _shard_map(
+                body_resume, mesh,
+                in_specs=(slot_specs, P(None), query_specs, P(None),
+                          state_specs, P(None), edge_specs),
                 out_specs=slot_specs,
             ),
             donate_argnums=dn,
@@ -719,20 +800,42 @@ class QuegelEngine(SlotProgram):
             # stays faithful (DESIGN.md §3).
             _ = np.asarray(self._slots["live"])
             for slot, q in admitted.items():
-                self._slots = self._admit(self._slots, slot, q)
+                if isinstance(q, ResumeAdmission):
+                    self._slots = self._admit_resume(
+                        self._slots, slot, q.query, q.payload,
+                        jnp.asarray(q.steps, jnp.int32),
+                    )
+                else:
+                    self._slots = self._admit(self._slots, slot, q)
             _ = np.asarray(self._slots["live"]).any()
             self._slots = self._super_round(self._slots)
         elif admitted:
             C = self.capacity
             admit_mask = np.zeros((C,), bool)
+            resume_mask = np.zeros((C,), bool)
             by_slot = [self._proto_q_np] * C
+            by_state = [self._proto_state_np] * C
+            rsteps = np.zeros((C,), np.int32)
             for slot, q in admitted.items():
-                admit_mask[slot] = True
-                by_slot[slot] = q
+                if isinstance(q, ResumeAdmission):
+                    resume_mask[slot] = True
+                    by_slot[slot] = q.query
+                    by_state[slot] = q.payload
+                    rsteps[slot] = q.steps
+                else:
+                    admit_mask[slot] = True
+                    by_slot[slot] = q
             queries = jax.tree.map(lambda *xs: np.stack(xs), *by_slot)
-            self._slots = self._round_admit(
-                self._slots, admit_mask, queries, *self._round_args
-            )
+            if resume_mask.any():
+                rstate = jax.tree.map(lambda *xs: np.stack(xs), *by_state)
+                self._slots = self._round_resume(
+                    self._slots, admit_mask, queries, resume_mask, rstate,
+                    rsteps, *self._round_args
+                )
+            else:
+                self._slots = self._round_admit(
+                    self._slots, admit_mask, queries, *self._round_args
+                )
         else:
             self._slots = self._round(self._slots, *self._round_args)
         return RoundOutcome(
@@ -764,6 +867,21 @@ class QuegelEngine(SlotProgram):
 
             live = jax.device_put(live, NamedSharding(self.mesh, P(None)))
         self._slots = dict(self._slots, live=live)
+
+    def slot_suspend(self, slots: list[int]) -> list[Any]:
+        """Preemption (DESIGN.md §9): pull each victim's full VQ/Q state
+        row to host and clear its device liveness, freeing the slot.  Off
+        the hot path — one host readback per suspension, like the paper's
+        console suspend.  Works identically for fused, legacy and SPMD
+        tables (np.asarray gathers V-sharded leaves to one host copy; the
+        resume round's exit scatter re-shards them)."""
+        idx = [int(s) for s in slots]
+        state_np = jax.tree.map(np.asarray, self._slots["state"])
+        payloads = [
+            jax.tree.map(lambda tab: tab[s].copy(), state_np) for s in idx
+        ]
+        self.slot_evict(idx)
+        return payloads
 
     def slot_observe(self) -> None:
         if self._frontier_count is not None:

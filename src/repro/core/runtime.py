@@ -33,6 +33,16 @@ the program; the runtime adds policy on top:
   semantics for runaway queries: a query whose declared budget is
   exhausted before it votes done retires with status ``TIMEOUT``
   (partial result collected) instead of occupying its slot forever.
+* **Preemptive scheduling** (``preemptive=True``, the paper's console
+  *suspend*): at a round boundary, a waiting query that beats the
+  worst-ranked running query by ``preempt_margin`` triggers
+  ``slot_suspend`` — the victim's resumable state is collected to host,
+  its slot freed, and it re-enters the queue as a *resume ticket* that
+  is later re-admitted through the same batched-admission path with its
+  step/budget accounting intact.  Suspension is observationally
+  equivalent to never having been admitted, modulo steps already
+  charged; it also unlocks oversubscription — more in-flight queries
+  than slots (``SlotStats.max_inflight``).
 * An opt-in **result cache**: canonicalize+hash the query pytree -> LRU
   of extracted results, serving Quegel's repeated-query workload without
   touching the device.
@@ -76,6 +86,13 @@ class SlotStats:
     rejected: int = 0
     cache_hits: int = 0
     supersteps_total: int = 0
+    # preemption (DESIGN.md §9): suspensions, resume re-admissions, and the
+    # high-water mark of in-flight queries (live slots + suspended) — the
+    # oversubscription headroom preemption buys (> capacity once any query
+    # has been suspended while all slots stay busy).
+    preemptions: int = 0
+    resumes: int = 0
+    max_inflight: int = 0
     round_times: list = dataclasses.field(default_factory=list)
     # per-query submit->result latency, appended at completion (bench: p50/p95)
     query_latencies: list = dataclasses.field(default_factory=list)
@@ -105,6 +122,12 @@ class Ticket:
     # Doubles as the sjf job-size estimate and the TIMEOUT eviction bound.
     submit_t: float = 0.0
     seq: int = 0              # submission order; ties break FIFO
+    # supersteps already charged to this query (nonzero only for a resume
+    # ticket): sjf ranks by REMAINING work, and the TIMEOUT bound keeps
+    # counting from here — suspension never resets the meter.
+    steps_done: int = 0
+    # opaque resumable state from ``slot_suspend`` (None = fresh query)
+    resume: Any = None
 
 
 class Scheduler:
@@ -113,9 +136,18 @@ class Scheduler:
     Only the pop order differs between implementations; the runtime pops
     exactly as many tickets as it has free slots, so a scheduler is the
     whole answer to "which queries share the next super-round".
+
+    Key-ordered schedulers additionally expose a *preemption rank*
+    (``running_key``): the key a RUNNING query would queue with given the
+    supersteps it has already consumed.  ``SlotRuntime(preemptive=True)``
+    compares the best waiting keys against the worst running ranks at
+    every round boundary and suspends losers (DESIGN.md §9).
     """
 
     name = "base"
+    # FIFO has no rank to compare a waiting query against a running one,
+    # so it cannot drive preemption; key-ordered schedulers can.
+    supports_preemption = False
 
     def push(self, ticket: Ticket) -> None:
         raise NotImplementedError
@@ -124,6 +156,15 @@ class Scheduler:
         raise NotImplementedError
 
     def __len__(self) -> int:
+        raise NotImplementedError
+
+    def waiting_keys(self, n: int) -> list:
+        """The ``n`` best queued keys in pop order (preemptive only)."""
+        raise NotImplementedError
+
+    def running_key(self, ticket: Ticket, steps: int):
+        """Rank of a RUNNING query after ``steps`` consumed supersteps —
+        comparable against ``waiting_keys`` (preemptive only)."""
         raise NotImplementedError
 
 
@@ -149,6 +190,8 @@ class FIFOScheduler(Scheduler):
 class _HeapScheduler(Scheduler):
     """Key-ordered admission (O(log n)); FIFO among equal keys."""
 
+    supports_preemption = True
+
     def __init__(self):
         self._h: list[tuple] = []
 
@@ -164,6 +207,12 @@ class _HeapScheduler(Scheduler):
     def __len__(self) -> int:
         return len(self._h)
 
+    def waiting_keys(self, n: int) -> list:
+        return [k for k, _, _ in heapq.nsmallest(n, self._h)]
+
+    def running_key(self, t: Ticket, steps: int):
+        return self.key(dataclasses.replace(t, steps_done=steps))
+
 
 class PriorityScheduler(_HeapScheduler):
     """User-supplied levels; lower ``priority`` is admitted first."""
@@ -175,14 +224,16 @@ class PriorityScheduler(_HeapScheduler):
 
 
 class SJFScheduler(_HeapScheduler):
-    """Shortest-job-first by declared superstep budget.  Light queries —
-    the paper's target workload — jump the convoy behind heavy ones;
-    undeclared (budget=0) queries sort last."""
+    """Shortest-job-first by declared *remaining* superstep budget.
+    Light queries — the paper's target workload — jump the convoy behind
+    heavy ones; undeclared (budget=0) queries sort last.  For a resume
+    ticket (or a running query's preemption rank) the key is the
+    remaining work ``budget - steps_done``, i.e. SRPT."""
 
     name = "sjf"
 
     def key(self, t: Ticket):
-        return t.budget if t.budget > 0 else math.inf
+        return t.budget - t.steps_done if t.budget > 0 else math.inf
 
 
 class DeadlineScheduler(_HeapScheduler):
@@ -268,13 +319,26 @@ class RoundOutcome:
     steps: np.ndarray  # (C,) int — cumulative supersteps of each slot's query
 
 
+@dataclasses.dataclass
+class ResumeAdmission:
+    """A suspended query re-entering through batched admission: instead of
+    a fresh query to ``init``, ``slot_round``'s admitted dict carries the
+    original query plus the opaque ``slot_suspend`` payload and the
+    superstep counter to restore (accounting carries over intact)."""
+
+    query: Any
+    payload: Any  # whatever slot_suspend returned for this query
+    steps: int    # cumulative supersteps already charged
+
+
 class SlotProgram:
     """Device-side half of the slot lifecycle (see module docstring).
 
-    ``slot_round`` receives ``admitted`` ({slot: query}) so admission can
-    stay fused into the round dispatch; on return the runtime retires
-    slots per ``RoundOutcome.done``, evicts budget-exhausted ones (via
-    ``slot_evict``) and collects results for both (``slot_collect``).
+    ``slot_round`` receives ``admitted`` ({slot: query-or-ResumeAdmission})
+    so admission can stay fused into the round dispatch; on return the
+    runtime retires slots per ``RoundOutcome.done``, evicts
+    budget-exhausted ones (via ``slot_evict``) and collects results for
+    both (``slot_collect``).
     """
 
     def slot_validate(self, query) -> Optional[tuple[str, Any]]:
@@ -291,6 +355,18 @@ class SlotProgram:
         """Clear device-side liveness for budget-evicted slots.  State must
         survive until ``slot_collect`` (partial results)."""
         return None
+
+    def slot_suspend(self, slots: list[int]) -> list[Any]:
+        """Collect each live slot's full resumable state to host and leave
+        the slot inert (as after ``slot_evict``).  Returns one opaque
+        payload per slot; the runtime hands it back through admission as a
+        ``ResumeAdmission``.  Invariant: resuming from the payload must be
+        observationally equivalent to never having been suspended."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not implement slot_suspend: "
+            "preemptive scheduling needs a program that can extract and "
+            "restore per-slot state (DESIGN.md §9)"
+        )
 
     def slot_observe(self) -> None:
         """Optional per-round diagnostics hook (e.g. frontier tracking)."""
@@ -313,19 +389,37 @@ class SlotRuntime:
         scheduler: Any = "fifo",
         stats: Optional[SlotStats] = None,
         cache_size: Optional[int] = None,
+        preemptive: bool = False,
+        preempt_margin: float = 0.0,
     ):
         self.program = program
         self.capacity = int(capacity)
         self.scheduler = make_scheduler(scheduler)
+        self.preemptive = bool(preemptive)
+        self.preempt_margin = float(preempt_margin)
+        if self.preemptive and not self.scheduler.supports_preemption:
+            raise ValueError(
+                f"scheduler '{self.scheduler.name}' cannot drive preemption: "
+                "it has no rank to compare waiting against running queries "
+                "(use priority/sjf/deadline, or a Scheduler with "
+                "supports_preemption)"
+            )
         self.stats = stats if stats is not None else SlotStats()
         self.results: dict[int, Any] = {}
         self.status: dict[int, str] = {}
+        # qid -> final cumulative superstep count, recorded at retirement
+        # (the preemption-parity harness pins these across suspend/resume).
+        self.steps: dict[int, int] = {}
         # Host mirror of slot liveness: updated from the same RoundOutcome
         # every round already pays, so admission never touches the device.
         self.live = np.zeros(self.capacity, dtype=bool)
         self.cache = ResultCache(cache_size) if cache_size else None
         self._slot_ticket: dict[int, Ticket] = {}
         self._qid_key: dict[int, str] = {}
+        # per-slot cumulative supersteps from the LAST RoundOutcome — what a
+        # suspension at this round boundary charges the victim with.
+        self._last_steps = np.zeros(self.capacity, dtype=np.int64)
+        self._n_suspended = 0
         self._next_qid = 0
         self._seq = 0
 
@@ -352,6 +446,7 @@ class SlotRuntime:
             if hit is not _MISS:
                 self.results[qid] = hit
                 self.status[qid] = DONE
+                self.steps[qid] = 0  # served host-side: no supersteps
                 self.stats.cache_hits += 1
                 self.stats.queries_done += 1
                 self.stats.query_latencies.append(time.perf_counter() - t)
@@ -367,35 +462,117 @@ class SlotRuntime:
     def pending(self) -> int:
         return len(self.scheduler)
 
+    def inflight(self) -> int:
+        """Queries holding state right now: live slots + suspended.  Can
+        exceed ``capacity`` under preemption (oversubscription)."""
+        return int(self.live.sum()) + self._n_suspended
+
+    def suspend(self, slots: list[int]) -> None:
+        """Suspend live slots at this round boundary: collect their
+        resumable state to host (``slot_suspend``), free the slots, and
+        re-queue the queries as resume tickets carrying their cumulative
+        superstep count.  Callable between rounds (the paper's console
+        suspend) and used by preemptive scheduling."""
+        slots = [int(s) for s in slots]
+        for s in slots:
+            if not (0 <= s < self.capacity) or not self.live[s]:
+                raise ValueError(f"cannot suspend slot {s}: not live")
+        payloads = self.program.slot_suspend(slots)
+        for s, payload in zip(slots, payloads):
+            tk = self._slot_ticket.pop(s)
+            self.live[s] = False
+            self.scheduler.push(
+                dataclasses.replace(
+                    tk, resume=payload, steps_done=int(self._last_steps[s])
+                )
+            )
+            self._n_suspended += 1
+            self.stats.preemptions += 1
+
+    def _admit_from_queue(self, free: list[int], admitted: dict) -> None:
+        """Pop tickets into free slots.  Resume tickets skip validation
+        (they were validated at first admission) and re-enter as
+        ``ResumeAdmission`` so the program restores state instead of
+        running ``init``."""
+        while free and len(self.scheduler):
+            tk = self.scheduler.pop()
+            if tk.resume is None:
+                rej = self.program.slot_validate(tk.query)
+                if rej is not None:
+                    status, res = rej
+                    self.results[tk.qid] = res
+                    self.status[tk.qid] = status
+                    self.steps[tk.qid] = 0
+                    self.stats.rejected += 1
+                    self._qid_key.pop(tk.qid, None)  # never enters cache
+                    continue
+            slot = free.pop()
+            if tk.resume is None:
+                admitted[slot] = tk.query
+            else:
+                admitted[slot] = ResumeAdmission(
+                    tk.query, tk.resume, tk.steps_done
+                )
+                self._n_suspended -= 1
+                self.stats.resumes += 1
+                tk = dataclasses.replace(tk, resume=None)  # payload handed off
+            self._slot_ticket[slot] = tk
+            self._last_steps[slot] = tk.steps_done
+            self.live[slot] = True
+
+    def _preempt(self, admitted: dict) -> None:
+        """Round-boundary preemption: pair the best waiting keys against
+        the worst-ranked running queries; every pairing the waiting side
+        wins by more than ``preempt_margin`` suspends the running query
+        and hands its slot to the queue.  Freshly admitted slots (no
+        executed round yet) are never victims."""
+        sched = self.scheduler
+        running = [
+            s for s in range(self.capacity)
+            if self.live[s] and s not in admitted
+        ]
+        if not running or not len(sched):
+            return
+        rank = {
+            s: sched.running_key(self._slot_ticket[s], int(self._last_steps[s]))
+            for s in running
+        }
+        # worst first; among equals prefer the later-submitted victim
+        running.sort(key=lambda s: (rank[s], self._slot_ticket[s].seq),
+                     reverse=True)
+        victims = []
+        for wkey, s in zip(sched.waiting_keys(len(running)), running):
+            if wkey < rank[s] - self.preempt_margin:
+                victims.append(s)
+            else:
+                break
+        if victims:
+            self.suspend(victims)
+            self._admit_from_queue(victims, admitted)
+
     def run_round(self) -> Optional[list[tuple[int, Any, str]]]:
-        """Admit + one program round + retire.  Returns the retired
-        [(qid, result, status)] — empty if the round completed nothing —
-        or None when there was nothing to run (no live slots, nothing
-        admissible)."""
+        """Admit (+ preempt) + one program round + retire.  Returns the
+        retired [(qid, result, status)] — empty if the round completed
+        nothing — or None when there was nothing to run (no live slots,
+        nothing admissible)."""
         t0 = time.perf_counter()
         admitted: dict[int, Any] = {}
         free = [i for i in range(self.capacity) if not self.live[i]]
-        while free and len(self.scheduler):
-            tk = self.scheduler.pop()
-            rej = self.program.slot_validate(tk.query)
-            if rej is not None:
-                status, res = rej
-                self.results[tk.qid] = res
-                self.status[tk.qid] = status
-                self.stats.rejected += 1
-                self._qid_key.pop(tk.qid, None)  # rejects never enter cache
-                continue
-            slot = free.pop()
-            admitted[slot] = tk.query
-            self._slot_ticket[slot] = tk
-            self.live[slot] = True
+        self._admit_from_queue(free, admitted)
+        if self.preemptive:
+            self._preempt(admitted)
         if not self.live.any():
             return None
+        self.stats.max_inflight = max(self.stats.max_inflight, self.inflight())
         occupancy = int(self.live.sum())
         out = self.program.slot_round(admitted)
         t_done = time.perf_counter()
         done = np.asarray(out.done)
         steps = np.asarray(out.steps)
+        # refresh the per-slot superstep mirror for live slots only (a free
+        # slot's device counter is stale and must not leak into a future
+        # suspension of whoever reuses the slot)
+        self._last_steps[self.live] = steps[self.live]
         finished = [int(s) for s in np.nonzero(done & self.live)[0]]
         evicted = [
             s
@@ -416,6 +593,7 @@ class SlotRuntime:
             status = DONE if slot in finished else TIMEOUT
             self.results[tk.qid] = res
             self.status[tk.qid] = status
+            self.steps[tk.qid] = int(steps[slot])
             self.stats.supersteps_total += int(steps[slot])
             if status == DONE:
                 self.stats.queries_done += 1

@@ -191,6 +191,37 @@ def bench_tables(path: str) -> str:
                 + f" — best: {best} (identical qid→result maps across all "
                 "schedulers, checked in-run).",
             ]
+        staged = sv.get("staged_preemption")
+        if staged:
+            lines += [
+                "",
+                "### Staged arrivals: preemptive sjf (SRPT suspend/resume)",
+                "",
+                "Heavies occupy every slot before the lights arrive, so "
+                "admission-order scheduling can no longer help — only "
+                "suspending a running heavy can. Results asserted identical "
+                "in-run (suspend/resume parity).",
+                "",
+                "| variant | light p95 | light p95 (rounds) | heavy p95 "
+                "(rounds) | preemptions | max inflight |",
+                "|---|---|---|---|---|---|",
+            ]
+            for name in ("sjf", "sjf_preemptive"):
+                m = staged.get(name)
+                if not m:
+                    continue
+                lines.append(
+                    f"| {name} | {fmt_s(m['light_p95_s'])} | "
+                    f"{m['light_p95_rounds']:.0f} | "
+                    f"{m['heavy_p95_rounds']:.0f} | {m['preemptions']} | "
+                    f"{m['max_inflight']} |"
+                )
+            lines += [
+                "",
+                f"**Light p95 speedup from preemption:** "
+                f"{staged['light_p95_rounds_speedup']:.2f}x in rounds "
+                f"(deterministic), {staged['light_p95_speedup']:.2f}x wall.",
+            ]
         cache = sv.get("cache")
         if cache:
             lines += [

@@ -17,10 +17,12 @@ stats, drain) is the shared ``core/runtime.py::SlotRuntime`` (DESIGN.md
 the device-side ``SlotProgram``: prefill + decode + retirement decisions.
 Through the runtime it inherits pluggable admission schedulers
 (fifo/priority/sjf/deadline), per-request token budgets with TIMEOUT
-eviction, and per-request statuses: a request whose
-``prompt + max_new_tokens`` exceeds ``max_len`` is REJECTED up front
-(empty result, counted in ``ServeStats.rejected``) instead of being
-silently recorded as an empty generation.
+eviction, preemptive scheduling (``preemptive=True``: a better-ranked
+waiting request suspends the worst running one mid-decode — KV-cache rows
+collected to host, restored bit-identically on resume), and per-request
+statuses: a request whose ``prompt + max_new_tokens`` exceeds ``max_len``
+is REJECTED up front (empty result, counted in ``ServeStats.rejected``)
+instead of being silently recorded as an empty generation.
 """
 from __future__ import annotations
 
@@ -34,7 +36,8 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.runtime import (
-    REJECTED, RoundOutcome, SlotProgram, SlotRuntime, SlotStats)
+    REJECTED, ResumeAdmission, RoundOutcome, SlotProgram, SlotRuntime,
+    SlotStats)
 from repro.models import transformer as T
 
 
@@ -75,7 +78,8 @@ class SlotServer(SlotProgram):
 
     def __init__(self, cfg: ArchConfig, params, capacity: int = 8,
                  max_len: int = 256, greedy: bool = True,
-                 scheduler="fifo", result_cache: Optional[int] = None):
+                 scheduler="fifo", result_cache: Optional[int] = None,
+                 preemptive: bool = False, preempt_margin: float = 0.0):
         self.cfg = cfg
         self.params = params
         self.C = capacity
@@ -83,7 +87,8 @@ class SlotServer(SlotProgram):
         self.greedy = greedy
         self.runtime = SlotRuntime(
             self, capacity, scheduler=scheduler, stats=ServeStats(),
-            cache_size=result_cache,
+            cache_size=result_cache, preemptive=preemptive,
+            preempt_margin=preempt_margin,
         )
         self._slot_req: dict[int, Request] = {}
         self._pos = np.zeros(capacity, np.int32)  # next position to write
@@ -171,6 +176,23 @@ class SlotServer(SlotProgram):
         shared decode dispatch for all live slots; done/steps come from the
         host-side token bookkeeping (EOS / max_new_tokens / max_len)."""
         for slot, req in admitted.items():
+            if isinstance(req, ResumeAdmission):
+                # suspended mid-decode: restore the slot's KV-cache rows and
+                # decode bookkeeping instead of prefilling — the next shared
+                # step continues exactly where the request left off.
+                p = req.payload
+                self.cache = jax.tree.map(
+                    lambda tab, row, ax: tab.at[
+                        (slice(None),) * ax + (slot,)
+                    ].set(row),
+                    self.cache, p["cache"], self._cache_slot_axes(),
+                )
+                self._pos[slot] = p["pos"]
+                self._remaining[slot] = p["remaining"]
+                self._generated[slot] = list(p["generated"])
+                self._last_tok[slot] = p["last_tok"]
+                self._slot_req[slot] = req.query
+                continue
             self._prefill_slot(slot, req.prompt)
             self._slot_req[slot] = req
             self._remaining[slot] = req.max_new_tokens
@@ -203,6 +225,38 @@ class SlotServer(SlotProgram):
 
     def slot_collect(self, slots: list[int]) -> list:
         return [np.asarray(self._generated[s], np.int32) for s in slots]
+
+    def _cache_slot_axes(self):
+        """Pytree (matching ``self.cache``) of the slot/batch axis per leaf:
+        ``blocks`` leaves are stacked over super-blocks by init_cache (axis 0
+        is the scanned layer axis, slots live on axis 1); everything else
+        (``rem_blocks``, ``enc_out``) is slot-leading."""
+        axes = jax.tree.map(lambda _: 0, self.cache)
+        axes["blocks"] = jax.tree.map(lambda _: 1, self.cache["blocks"])
+        return axes
+
+    def slot_suspend(self, slots: list[int]) -> list:
+        """Suspend mid-decode (DESIGN.md §9): pull each victim's KV-cache
+        rows to host along with its decode bookkeeping; resuming restores
+        both, so the continued generation is token-identical to an
+        uninterrupted run (greedy decode is deterministic)."""
+        idx = [int(s) for s in slots]
+        cache_np = jax.tree.map(np.asarray, self.cache)
+        axes = self._cache_slot_axes()
+        payloads = []
+        for s in idx:
+            payloads.append(dict(
+                cache=jax.tree.map(
+                    lambda tab, ax: np.take(tab, s, axis=ax).copy(),
+                    cache_np, axes,
+                ),
+                pos=int(self._pos[s]),
+                remaining=int(self._remaining[s]),
+                generated=list(self._generated[s]),
+                last_tok=int(self._last_tok[s]),
+            ))
+            self._slot_req.pop(s, None)
+        return payloads
 
     def cache_key(self, req: Request) -> str:
         import hashlib

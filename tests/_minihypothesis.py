@@ -1,0 +1,210 @@
+"""Deterministic fallback for the subset of ``hypothesis`` our property
+tests use, for environments where the real package cannot be installed
+(the dev container has no network; CI installs real hypothesis and runs
+the same tests with actual shrinking — see .github/workflows/ci.yml).
+
+Semantics: ``@given`` re-runs the test ``max_examples`` times, drawing
+each argument from its strategy with an rng seeded from the test name and
+the example index — fully deterministic, no shrinking, no database.
+"""
+from __future__ import annotations
+
+import functools
+import hashlib
+import inspect
+import math
+
+import numpy as np
+
+
+class Strategy:
+    def example(self, rng: np.random.Generator):
+        raise NotImplementedError
+
+    def __or__(self, other: "Strategy") -> "Strategy":
+        return _OneOf([self, other])
+
+    def map(self, fn) -> "Strategy":
+        return _Mapped(self, fn)
+
+
+class _OneOf(Strategy):
+    def __init__(self, options):
+        # flatten nested unions so a | b | c picks uniformly over 3
+        self.options = []
+        for o in options:
+            self.options += o.options if isinstance(o, _OneOf) else [o]
+
+    def example(self, rng):
+        return self.options[int(rng.integers(len(self.options)))].example(rng)
+
+
+class _Mapped(Strategy):
+    def __init__(self, base, fn):
+        self.base, self.fn = base, fn
+
+    def example(self, rng):
+        return self.fn(self.base.example(rng))
+
+
+class _Just(Strategy):
+    def __init__(self, value):
+        self.value = value
+
+    def example(self, rng):
+        return self.value
+
+
+class _Integers(Strategy):
+    def __init__(self, min_value, max_value):
+        self.lo, self.hi = int(min_value), int(max_value)
+
+    def example(self, rng):
+        return int(rng.integers(self.lo, self.hi + 1))
+
+
+class _Floats(Strategy):
+    def __init__(self, min_value, max_value):
+        self.lo, self.hi = float(min_value), float(max_value)
+
+    def example(self, rng):
+        # bias toward boundaries, like hypothesis does
+        r = rng.random()
+        if r < 0.05:
+            return self.lo
+        if r < 0.1:
+            return self.hi
+        return float(rng.uniform(self.lo, self.hi))
+
+
+class _Booleans(Strategy):
+    def example(self, rng):
+        return bool(rng.integers(2))
+
+
+class _Lists(Strategy):
+    def __init__(self, elements, min_size=0, max_size=None):
+        self.elements = elements
+        self.min_size = int(min_size)
+        self.max_size = self.min_size + 10 if max_size is None else int(max_size)
+
+    def example(self, rng):
+        n = int(rng.integers(self.min_size, self.max_size + 1))
+        return [self.elements.example(rng) for _ in range(n)]
+
+
+class _Tuples(Strategy):
+    def __init__(self, *parts):
+        self.parts = parts
+
+    def example(self, rng):
+        return tuple(p.example(rng) for p in self.parts)
+
+
+class _Composite(Strategy):
+    def __init__(self, fn, args, kwargs):
+        self.fn, self.args, self.kwargs = fn, args, kwargs
+
+    def example(self, rng):
+        return self.fn(lambda s: s.example(rng), *self.args, **self.kwargs)
+
+
+class strategies:
+    """Mirrors ``hypothesis.strategies`` for the subset we use."""
+
+    @staticmethod
+    def just(value):
+        return _Just(value)
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def floats(min_value, max_value, allow_nan=False, allow_infinity=False):
+        assert not allow_nan and not allow_infinity, "shim: finite floats only"
+        return _Floats(min_value, max_value)
+
+    @staticmethod
+    def booleans():
+        return _Booleans()
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=None):
+        return _Lists(elements, min_size, max_size)
+
+    @staticmethod
+    def tuples(*parts):
+        return _Tuples(*parts)
+
+    @staticmethod
+    def one_of(*options):
+        return _OneOf(list(options))
+
+    @staticmethod
+    def composite(fn):
+        def make(*args, **kwargs):
+            return _Composite(fn, args, kwargs)
+
+        return make
+
+    @staticmethod
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Mapped(_Integers(0, len(seq) - 1), lambda i: seq[i])
+
+
+_DEFAULT_MAX_EXAMPLES = 100
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._mh_max_examples = int(max_examples)
+        return fn
+
+    return deco
+
+
+def given(*strats):
+    """Positional-strategy ``@given`` only (what our tests use)."""
+
+    def deco(fn):
+        # strategies consume the RIGHTMOST parameters (as in hypothesis);
+        # earlier ones stay visible to pytest as fixtures, passed by name
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        consumed = [p.name for p in params[len(params) - len(strats):]]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_mh_max_examples", _DEFAULT_MAX_EXAMPLES)
+            base = int(
+                hashlib.sha1(fn.__name__.encode()).hexdigest()[:8], 16
+            )
+            for i in range(n):
+                rng = np.random.default_rng((base + i) % 2**32)
+                drawn = {
+                    name: s.example(rng)
+                    for name, s in zip(consumed, strats)
+                }
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (shim, example {i}): "
+                        f"{fn.__name__}({drawn!r})"
+                    ) from e
+
+        # hide the consumed params from pytest's fixture resolution
+        wrapper.__signature__ = sig.replace(
+            parameters=params[: len(params) - len(strats)]
+        )
+        return wrapper
+
+    return deco
+
+
+# the import surface test files use: `from hypothesis import given, settings,
+# strategies as st` maps onto this module 1:1
+st = strategies
+assert math  # keep the import (mirrors hypothesis' numeric helpers)

@@ -1,0 +1,389 @@
+"""Differential preemption-parity harness (DESIGN.md §9).
+
+The suspend/resume invariant: a query suspended at any round boundary and
+resumed later must be observationally equivalent to one that was never
+suspended — identical result, identical terminal status (DONE/TIMEOUT),
+identical cumulative superstep count.  Every cell of the
+(app x scheduler x steps_per_round x fused/legacy/SPMD) matrix is run
+twice — uninterrupted, then with forced suspensions injected at
+adversarial boundaries (the admission round, every round, and the
+boundary just before each query's final round) — and the two fingerprints
+must match exactly.  A property test drives the same comparison from
+random suspend schedules.  Preemptive scheduling (preemptive=True) is
+then tested end-to-end: sjf/deadline suspend convoy-making heavies for
+better-ranked waiting queries, oversubscribing capacity, with the same
+results as the non-preemptive run.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps.ppsp import make_bfs_engine, make_bibfs_engine
+from repro.core.graph import random_graph
+from repro.core.runtime import (
+    DONE, TIMEOUT, SlotProgram, SlotRuntime)
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _minihypothesis import given, settings, strategies as st
+
+
+MAKERS = {"bfs": make_bfs_engine, "bibfs": make_bibfs_engine}
+SCHEDULERS = ["fifo", "priority", "sjf", "deadline"]
+# (mode, steps_per_round); legacy predates multi-superstep rounds
+MODES = [("fused", 1), ("fused", 4), ("legacy", 1)]
+
+
+@pytest.fixture(scope="module")
+def matrix_graph():
+    """48-vertex random graph with a 12-vertex path tail (48->...->59): the
+    random part gives short heterogeneous queries, the tail gives genuinely
+    HEAVY ones (11 supersteps) so budget eviction fires even when
+    steps_per_round=4 jumps past small budgets inside one fused round."""
+    from repro.core.graph import Graph
+
+    g = random_graph(48, 3.0, seed=1, directed=True)
+    src = np.concatenate([np.asarray(g.src), np.arange(48, 59)])
+    dst = np.concatenate([np.asarray(g.dst), np.arange(49, 60)])
+    return Graph.from_edges(src.astype(np.int32), dst.astype(np.int32), 60)
+
+
+def _submits(g, n=6, seed=3, heavy=False):
+    """Mixed workload: some queries carry a budget (TIMEOUT eviction must
+    fire at the same cumulative step count across suspensions), plus
+    priority/deadline attributes so every scheduler has keys to order by."""
+    rng = np.random.default_rng(seed)
+    pairs = rng.integers(0, min(g.n_real, 48), (n, 2))
+    subs = []
+    for i, (a, b) in enumerate(pairs):
+        kw = dict(priority=int(rng.integers(0, 3)), deadline=float(i % 4))
+        if i % 3 == 1:
+            kw["budget"] = 2  # evicts mid-flight (when the query is long)
+        elif i % 3 == 2:
+            kw["budget"] = 64  # generous: completes, but sjf-rankable
+        subs.append((jnp.asarray([int(a), int(b)], jnp.int32), kw))
+    if heavy:
+        # down the path tail: 11 supersteps needed (BiBFS meets in ~6),
+        # budget 4 -> TIMEOUT under both apps even at steps_per_round=4;
+        # 9 needed with slack budget -> DONE (matrix_graph only)
+        subs.append((jnp.asarray([48, 59], jnp.int32),
+                     dict(budget=4, deadline=2.0)))
+        subs.append((jnp.asarray([48, 57], jnp.int32),
+                     dict(budget=64, priority=1)))
+    return subs
+
+
+def _fingerprint(eng):
+    res = {
+        q: {k: np.asarray(v).tolist() for k, v in r.items()}
+        for q, r in eng.runtime.results.items()
+    }
+    return res, dict(eng.status), dict(eng.runtime.steps)
+
+
+def _drain(eng, submits, suspend_at=None, record_completions=False):
+    """Drive the runtime round-by-round, suspending live slots per
+    ``suspend_at`` ({round_index: "all" | [slot, ...]}) AFTER that round
+    executes (the round boundary — admission happens next round).
+    """
+    for q, kw in submits:
+        eng.submit(q, **kw)
+    completions = {}
+    r = 0
+    while len(eng.runtime.scheduler) or eng.runtime.live.any():
+        seen = set(eng.runtime.results)
+        eng.runtime.run_round()
+        for qid in set(eng.runtime.results) - seen:
+            completions[qid] = r
+        sel = (suspend_at or {}).get(r)
+        if sel is not None:
+            live = [s for s in range(eng.capacity) if eng.runtime.live[s]]
+            victims = live if sel == "all" else [s for s in live if s in sel]
+            if victims:
+                eng.runtime.suspend(victims)
+        r += 1
+        assert r < 10_000, "suspension schedule prevented progress"
+    if record_completions:
+        return _fingerprint(eng), completions
+    return _fingerprint(eng)
+
+
+def _adversarial_schedules(completions):
+    """The boundaries most likely to break resume accounting: the very
+    first round (suspend-at-admission-round: victims have run exactly one
+    round since admission), every boundary (including the one right before
+    each query's final round), and precisely the pre-final boundaries."""
+    every = {r: "all" for r in range(max(completions.values()) + 2)}
+    final = {c - 1: "all" for c in completions.values() if c > 0}
+    return {"admission_round": {0: "all"}, "every_round": every,
+            "pre_final_round": final or {0: "all"}}
+
+
+# ----------------------------------------------------- differential matrix
+@pytest.mark.parametrize("app", sorted(MAKERS))
+@pytest.mark.parametrize("mode,spr", MODES, ids=[f"{m}-spr{k}" for m, k in MODES])
+def test_suspend_resume_parity_matrix(matrix_graph, app, mode, spr):
+    g = matrix_graph
+    make = MAKERS[app]
+    for scheduler in SCHEDULERS:
+        def eng():
+            return make(g, capacity=3, scheduler=scheduler,
+                        legacy=(mode == "legacy"), steps_per_round=spr)
+
+        subs = _submits(g, heavy=True)
+        want, completions = _drain(eng(), subs, record_completions=True)
+        _, statuses, steps = want
+        assert TIMEOUT in statuses.values() and DONE in statuses.values()
+        for name, sched in _adversarial_schedules(completions).items():
+            e = eng()
+            got = _drain(e, subs, suspend_at=sched)
+            assert got == want, (app, mode, spr, scheduler, name)
+            if name == "every_round":
+                assert e.stats.preemptions > 0 and e.stats.resumes > 0
+
+
+def test_suspend_errors(small_directed):
+    g = small_directed
+    eng = make_bfs_engine(g, capacity=2)
+    with pytest.raises(ValueError, match="not live"):
+        eng.runtime.suspend([0])
+    eng.submit(jnp.asarray([0, 5], jnp.int32))
+    eng.run_round()
+    dead = next(s for s in range(2) if not eng.runtime.live[s])
+    with pytest.raises(ValueError, match="not live"):
+        eng.runtime.suspend([dead])  # only one slot is live
+    with pytest.raises(ValueError, match="not live"):
+        eng.runtime.suspend([7])  # out of range
+
+    class NoSuspend(SlotProgram):
+        pass
+
+    rt = SlotRuntime(NoSuspend(), 2)
+    rt.live[0] = True
+    rt._slot_ticket[0] = object()
+    with pytest.raises(NotImplementedError, match="slot_suspend"):
+        rt.suspend([0])
+
+
+def test_suspended_query_keeps_budget_accounting(small_directed):
+    """TIMEOUT eviction fires at the same cumulative superstep count no
+    matter how often the query was suspended in between — suspension never
+    resets the meter."""
+    g = small_directed
+    subs = [(jnp.asarray([0, 55], jnp.int32), dict(budget=3))]
+    want = _drain(make_bfs_engine(g, capacity=1), subs)
+    got = _drain(make_bfs_engine(g, capacity=1), subs,
+                 suspend_at={0: "all", 1: "all", 2: "all", 3: "all"})
+    assert got == want
+    _, statuses, steps = got
+    assert list(statuses.values()) == [TIMEOUT]
+    assert list(steps.values()) == [3]
+
+
+# ------------------------------------------------- random schedules (property)
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 24), st.integers(0, 2)),
+                min_size=0, max_size=10),
+       st.integers(1, 4))
+def test_random_suspend_schedule_parity(small_directed, sched_pairs, spr):
+    """Any schedule of (round, slot) suspensions leaves results, statuses
+    and step counts bit-identical to the uninterrupted run."""
+    g = small_directed
+    suspend_at = {}
+    for r, s in sched_pairs:
+        suspend_at.setdefault(r, []).append(s)
+    subs = _submits(g, n=5, seed=11)
+    want = _drain(make_bfs_engine(g, capacity=3, steps_per_round=spr), subs)
+    got = _drain(make_bfs_engine(g, capacity=3, steps_per_round=spr), subs,
+                 suspend_at=suspend_at)
+    assert got == want
+
+
+# ----------------------------------------------------------- SPMD subprocess
+SPMD_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.apps.ppsp import make_bfs_engine, make_bibfs_engine
+    from repro.core.graph import random_graph
+    from repro.launch.mesh import make_mesh
+
+    assert len(jax.devices()) == 8
+    mesh8 = make_mesh((8,), ("w",))
+    # 48-vertex random graph + 16-vertex path tail (|V|=64 divides the
+    # mesh axis): heavy tail queries keep slots live across many rounds
+    # even at steps_per_round=4, so forced suspension really fires
+    from repro.core.graph import Graph
+    gr = random_graph(48, 3.0, seed=1, directed=True)
+    src = np.concatenate([np.asarray(gr.src), np.arange(48, 63)])
+    dst = np.concatenate([np.asarray(gr.dst), np.arange(49, 64)])
+    g = Graph.from_edges(src.astype(np.int32), dst.astype(np.int32), 64)
+    rng = np.random.default_rng(3)
+    subs = []
+    for i, (a, b) in enumerate(rng.integers(0, 48, (6, 2))):
+        kw = {"priority": int(rng.integers(0, 3)), "deadline": float(i % 4)}
+        if i % 3 == 1:
+            kw["budget"] = 2
+        elif i % 3 == 2:
+            kw["budget"] = 64
+        subs.append((jnp.asarray([int(a), int(b)], jnp.int32), kw))
+    subs.append((jnp.asarray([48, 63], jnp.int32), {"budget": 4}))
+    subs.append((jnp.asarray([48, 61], jnp.int32), {"budget": 64}))
+
+    def fingerprint(eng):
+        res = {q: {k: np.asarray(v).tolist() for k, v in r.items()}
+               for q, r in eng.runtime.results.items()}
+        return res, dict(eng.status), dict(eng.runtime.steps)
+
+    def drain(eng, suspend_all_every_round=False):
+        for q, kw in subs:
+            eng.submit(q, **kw)
+        r = 0
+        while len(eng.runtime.scheduler) or eng.runtime.live.any():
+            eng.runtime.run_round()
+            if suspend_all_every_round:
+                live = [s for s in range(eng.capacity) if eng.runtime.live[s]]
+                if live:
+                    eng.runtime.suspend(live)
+            r += 1
+            assert r < 10_000
+        return fingerprint(eng)
+
+    # forced-suspension parity: sharded vs the unsharded, UNSUSPENDED run —
+    # the SPMD resume path must re-shard the restored V-partitioned leaves
+    for make in (make_bfs_engine, make_bibfs_engine):
+        for k in (1, 4):
+            want = drain(make(g, capacity=3, steps_per_round=k))
+            for part in ("dst", "src"):
+                eng = make(g, capacity=3, steps_per_round=k,
+                           mesh=mesh8, partition=part)
+                got = drain(eng, suspend_all_every_round=True)
+                assert got == want, (make.__name__, k, part)
+                assert eng.stats.preemptions > 0
+            print("spmd suspend parity ok:", make.__name__, "spr", k)
+
+    # preemptive sjf under the mesh: same results as non-preemptive,
+    # oversubscription observed
+    def staged(eng):
+        heavy = [eng.submit(jnp.asarray([s, 63], jnp.int32), budget=50)
+                 for s in (48, 49)]
+        eng.run_round()
+        light = [eng.submit(jnp.asarray([2, 3], jnp.int32), budget=6)
+                 for _ in range(3)]
+        eng.run_until_drained()
+        return fingerprint(eng)
+
+    want = staged(make_bfs_engine(g, capacity=2, scheduler="sjf"))
+    eng = make_bfs_engine(g, capacity=2, scheduler="sjf", preemptive=True,
+                          mesh=mesh8)
+    got = staged(eng)
+    assert got == want
+    assert eng.stats.preemptions >= 1 and eng.stats.max_inflight > 2
+    print("PREEMPTION_SPMD_OK")
+    """
+)
+
+
+def test_spmd_suspend_resume_parity():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep)
+    )
+    env["JAX_PLATFORMS"] = "cpu"  # see test_sharded_engine.py
+    r = subprocess.run([sys.executable, "-c", SPMD_SCRIPT],
+                       capture_output=True, text=True, env=env, timeout=560)
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "PREEMPTION_SPMD_OK" in r.stdout
+
+
+# -------------------------------------------------- preemptive scheduling
+def test_preemptive_requires_rankable_scheduler(small_directed):
+    with pytest.raises(ValueError, match="cannot drive preemption"):
+        make_bfs_engine(small_directed, capacity=2, scheduler="fifo",
+                        preemptive=True)
+
+
+def _path_graph(n=60):
+    """Directed path 0->1->...->n-1: BFS runtime == requested distance, so
+    budgets are HONEST job sizes and heavies really do convoy."""
+    from repro.core.graph import Graph
+
+    src = np.arange(n - 1, dtype=np.int32)
+    return Graph.from_edges(src, src + 1, n)
+
+
+def _staged_convoy(eng):
+    """Two genuine heavies (~58 supersteps) grab both slots; three short
+    lights (4 supersteps each) arrive one round later."""
+    heavy = [eng.submit(jnp.asarray([s, 59], jnp.int32), budget=60)
+             for s in (0, 1)]
+    eng.run_round()
+    light = [eng.submit(jnp.asarray([i + 2, i + 6], jnp.int32), budget=8)
+             for i in range(3)]
+    order = []
+    while len(eng.runtime.scheduler) or eng.runtime.live.any():
+        order += [qid for qid, _, _ in eng.runtime.run_round() or []]
+    return heavy, light, order
+
+
+def test_preemptive_sjf_lets_lights_jump_the_convoy():
+    g = _path_graph()
+    ref = make_bfs_engine(g, capacity=2, scheduler="sjf")
+    _staged_convoy(ref)
+    eng = make_bfs_engine(g, capacity=2, scheduler="sjf", preemptive=True)
+    heavy, light, order = _staged_convoy(eng)
+    # every light (SRPT winner) completed before any heavy retired
+    assert max(order.index(l) for l in light) < min(order.index(h) for h in heavy)
+    assert eng.stats.preemptions >= 1 and eng.stats.resumes >= 1
+    # oversubscription: suspended heavies + live lights exceed capacity
+    assert eng.stats.max_inflight > eng.capacity
+    # ...with results identical to the non-preemptive sjf run
+    assert _fingerprint(eng) == _fingerprint(ref)
+
+
+def test_preemptive_deadline_urgent_query_preempts():
+    g = _path_graph()
+    eng = make_bfs_engine(g, capacity=1, scheduler="deadline",
+                          preemptive=True)
+    lax_q = eng.submit(jnp.asarray([0, 50], jnp.int32), deadline=100.0)
+    eng.run_round()
+    urgent = eng.submit(jnp.asarray([1, 4], jnp.int32), deadline=1.0)
+    order = []
+    while len(eng.runtime.scheduler) or eng.runtime.live.any():
+        order += [qid for qid, _, _ in eng.runtime.run_round() or []]
+    assert order.index(urgent) < order.index(lax_q)
+    assert eng.stats.preemptions >= 1
+
+
+def test_preempt_margin_suppresses_preemption():
+    g = _path_graph()
+    eng = make_bfs_engine(g, capacity=2, scheduler="sjf", preemptive=True,
+                          preempt_margin=1e9)
+    _staged_convoy(eng)
+    assert eng.stats.preemptions == 0
+    assert eng.stats.max_inflight <= eng.capacity
+
+
+def test_no_thrash_same_rank():
+    """Equal-ranked waiting queries never evict a running one (strict
+    inequality): identical budgets -> zero preemptions, at EVERY one of
+    the ~30 round boundaries the running query survives."""
+    g = _path_graph()
+    eng = make_bfs_engine(g, capacity=1, scheduler="sjf", preemptive=True)
+    eng.submit(jnp.asarray([0, 30], jnp.int32), budget=32)
+    eng.run_round()
+    eng.submit(jnp.asarray([0, 30], jnp.int32), budget=32)
+    eng.run_until_drained()
+    # the running query had already consumed steps, so its SRPT rank is
+    # strictly BETTER than the equal-budget challenger: no preemption
+    assert eng.stats.preemptions == 0

@@ -173,6 +173,93 @@ def test_query_max_rounds_raises_descriptive(small_directed):
     assert len(res) == 1
 
 
+def test_evicted_slot_reuse_fully_reinitialized(small_directed):
+    """A slot freed by TIMEOUT eviction must hand its successor a fully
+    re-initialized state/query/step row: the next query's result and step
+    count are identical to a fresh engine's, with no value bleed from the
+    evicted occupant's round 1."""
+    g = small_directed
+    for kw in ({}, {"steps_per_round": 2}, {"legacy": True}):
+        eng = make_bfs_engine(g, capacity=1, **kw)
+        doomed = eng.submit(jnp.asarray((0, 55), jnp.int32), budget=1)
+        nxt = eng.submit(jnp.asarray((3, 9), jnp.int32))
+        res = eng.run_until_drained()
+        assert eng.status[doomed] == TIMEOUT
+        assert eng.status[nxt] == DONE
+        ref = make_bfs_engine(g, capacity=1, **kw)
+        want = ref.query(jnp.asarray((3, 9), jnp.int32))
+        assert int(res[nxt]["dist"]) == int(want["dist"])
+        # superstep accounting restarted from zero in the reused slot
+        assert eng.runtime.steps[nxt] == ref.runtime.steps[0]
+        # and the device row carries the successor's bookkeeping, not the
+        # evicted query's: step == the successor's count, done reset
+        assert int(np.asarray(eng._slots["step"])[0]) == eng.runtime.steps[nxt]
+        assert not bool(np.asarray(eng._slots["live"])[0])
+
+
+# ------------------------------------------------ scheduler edge cases (PR 6)
+def test_equal_priority_fifo_tiebreak_stable():
+    """Equal keys pop in submission order for every heap scheduler — the
+    seq tiebreak, pushed well past a trivial handful of tickets."""
+    for cls, kw in ((PriorityScheduler, dict(priority=7)),
+                    (SJFScheduler, dict(budget=5)),
+                    (DeadlineScheduler, dict(deadline=3.0))):
+        s = cls()
+        for i in range(50):
+            s.push(Ticket(i, query=None, seq=i, **kw))
+        assert [s.pop().qid for i in range(50)] == list(range(50))
+
+
+def test_deadline_in_the_past(small_directed):
+    """An already-missed deadline is just a very urgent key: admitted
+    first, completed DONE — never rejected or skipped."""
+    g = small_directed
+    eng = make_bfs_engine(g, capacity=1, scheduler="deadline")
+    future = eng.submit(jnp.asarray((0, 5), jnp.int32), deadline=1e12)
+    past = eng.submit(jnp.asarray((3, 9), jnp.int32), deadline=-1e6)
+    order = []
+    while len(eng.runtime.scheduler) or eng.runtime.live.any():
+        order += [qid for qid, _ in eng.run_round()]
+    assert order == [past, future]
+    assert eng.status[past] == eng.status[future] == DONE
+
+
+def test_budget_zero_is_unlimited(small_directed):
+    """budget=0 declares nothing: never evicted (runs to completion), and
+    sjf ranks it LAST (inf key) behind every declared budget."""
+    g = small_directed
+    eng = make_bfs_engine(g, capacity=1, scheduler="sjf")
+    undeclared = eng.submit(jnp.asarray((0, 55), jnp.int32), budget=0)
+    declared = eng.submit(jnp.asarray((3, 9), jnp.int32), budget=30)
+    order = []
+    while len(eng.runtime.scheduler) or eng.runtime.live.any():
+        order += [qid for qid, _ in eng.run_round()]
+    assert order == [declared, undeclared]  # inf key sorts last
+    assert eng.status[undeclared] == DONE and eng.stats.timeouts == 0
+
+
+def test_submit_while_draining(small_directed):
+    """Queries submitted while earlier ones are mid-flight (and after a
+    full drain) retire normally — the queue/liveness invariants hold
+    across drain boundaries."""
+    g = small_directed
+    eng = make_bfs_engine(g, capacity=2)
+    first = [eng.submit(jnp.asarray(p, jnp.int32)) for p in _pairs(g, 3, seed=21)]
+    late = []
+    r = 0
+    while len(eng.runtime.scheduler) or eng.runtime.live.any():
+        eng.run_round()
+        if r < 2:  # inject while slots are still live
+            late.append(eng.submit(jnp.asarray((10 + r, 40 + r), jnp.int32)))
+        r += 1
+    assert set(eng.status) == set(first + late)
+    assert all(s == DONE for s in eng.status.values())
+    # the engine stays usable after a complete drain
+    again = eng.submit(jnp.asarray((5, 25), jnp.int32))
+    eng.run_until_drained()
+    assert eng.status[again] == DONE
+
+
 # ------------------------------------------------------------- result cache
 def test_result_cache_hits(small_directed):
     g = small_directed
