@@ -1020,8 +1020,200 @@ def bench_kernels(quick=False):
     emit("kernels", "edges", g.num_edges)
 
 
+# ------------------------------------------------------------- recovery
+def bench_recovery(quick=False):
+    """Crash tolerance (DESIGN.md §10): what durability costs and buys.
+
+    Three sub-tables, merged into ``BENCH_quegel.json`` under ``recovery``:
+
+    * ``restore`` — cold boot (build the Hub² index through the engine)
+      vs durable-store restore (``load_or_build_hub_index`` hit) for a
+      query-ready serving state.  The store hit runs ZERO
+      index-construction super-rounds (asserted); restore must be ≥ 5x
+      faster than cold start (asserted in non-quick runs).
+    * ``journal`` — WAL + snapshot overhead on a mixed light/heavy BFS
+      drain at cadences {off, WAL-only, snapshot every 8, every 1}, with
+      qid→result maps asserted identical across cadences (journaling and
+      snapshot/resume must never change answers) plus journal bytes and
+      record counts per cadence.
+    * ``mttr`` — mean time to recovery: a journaled drain is cut mid-
+      flight; measured are journal replay time on a fresh engine and the
+      wall time until that engine retires its first query (the serving
+      gap a crash actually causes).
+    """
+    import shutil
+    import tempfile
+
+    import jax
+
+    from repro.apps.hub2 import load_or_build_hub_index, make_hub2_engine
+    from repro.apps.ppsp import make_bfs_engine
+    from repro.core.graph import barabasi_albert, grid_terrain
+    from repro.core.runtime import QueryJournal
+    from repro.core.store import Store
+    from repro.launch.supervise import recover
+
+    out: dict = {
+        "meta": {
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "quick": bool(quick),
+        },
+    }
+    tmp = tempfile.mkdtemp(prefix="bench_recovery_")
+    try:
+        # ---------------- cold start vs store restore -----------------------
+        g = barabasi_albert(300 if quick else 1200, 3, seed=41)
+        root = os.path.join(tmp, "store")
+        t0 = time.perf_counter()
+        idx, info = load_or_build_hub_index(Store(root), g, k=16, capacity=8)
+        cold_s = time.perf_counter() - t0
+        assert info["built"] and info["index_rounds"] > 0
+        t0 = time.perf_counter()
+        idx2, info2 = load_or_build_hub_index(Store(root), g, k=16, capacity=8)
+        restore_s = time.perf_counter() - t0
+        assert not info2["built"] and info2["index_rounds"] == 0
+        q = jnp.asarray([0, g.n_real - 1], jnp.int32)
+        want = make_hub2_engine(g, idx, capacity=1).query(q)
+        got = make_hub2_engine(g, idx2, capacity=1).query(q)
+        assert int(got["dist"]) == int(want["dist"])
+        entry = os.path.join(root, "index")
+        out["restore"] = dict(
+            cold_start_s=cold_s,
+            restore_s=restore_s,
+            speedup=cold_s / restore_s,
+            index_rounds_cold=info["index_rounds"],
+            index_rounds_restore=0,
+            store_bytes=sum(
+                os.path.getsize(os.path.join(entry, f))
+                for f in os.listdir(entry)
+            ),
+        )
+        emit("recovery", "cold_start_s", cold_s)
+        emit("recovery", "restore_s", restore_s)
+        emit("recovery", "restore_speedup", out["restore"]["speedup"])
+        if not quick:
+            assert out["restore"]["speedup"] >= 5.0, out["restore"]
+
+        # ---------------- journal + snapshot overhead -----------------------
+        rows, cols = (10, 12) if quick else (20, 24)
+        g2, _ = grid_terrain(rows, cols, seed=42)
+        rng = np.random.default_rng(43)
+        subs = [(jnp.asarray([int(a), int(b)], jnp.int32), dict(budget=64))
+                for a, b in rng.integers(0, g2.n_real, (12 if quick else 24, 2))]
+        subs += [(jnp.asarray([0, g2.n_real - 1], jnp.int32),
+                  dict(budget=4 * (rows + cols)))] * 2  # heavies
+
+        def run_cadence(tag, cadence):
+            eng = make_bfs_engine(g2, capacity=4)
+            if cadence:
+                # snapshots resume through a separate jitted dispatch
+                # (admit_batch_resume) specialized per resume-batch size:
+                # warm it at every size up to capacity, else the snapshot
+                # cadences get charged its one-time compiles
+                eng.runtime.journal = QueryJournal(
+                    os.path.join(tmp, f"warm_{tag}.wal"))
+                eng.runtime.snapshot_every = 1
+            _warm(eng, [q for q, _ in subs[:6]])
+            if cadence:
+                eng.runtime.journal.close()
+                eng.runtime.journal = None
+                eng.runtime.snapshot_every = 0
+            jp = None
+            if cadence is not None:
+                jp = os.path.join(tmp, f"j_{tag}.wal")
+                eng.runtime.journal = QueryJournal(jp)
+                eng.runtime.snapshot_every = cadence
+            _reset_stats(eng)
+            for q, kw in subs:
+                eng.submit(q, **kw)
+            t0 = time.perf_counter()
+            eng.run_until_drained()
+            wall = time.perf_counter() - t0
+            res_map = {
+                qid: {k: np.asarray(v).tolist() for k, v in r.items()}
+                for qid, r in eng.runtime.results.items()
+            }
+            j = eng.runtime.journal
+            cell = dict(
+                wall_s=wall,
+                rounds=eng.runtime.stats.rounds,
+                snapshots=eng.runtime.stats.snapshots,
+                journal_bytes=j.bytes_written if j else 0,
+                journal_records=j.records_written if j else 0,
+            )
+            if j:
+                j.close()
+            return cell, res_map
+
+        cadences = [("off", None), ("wal", 0), ("snap8", 8), ("snap1", 1)]
+        jout: dict = {}
+        base_map = None
+        for tag, cadence in cadences:
+            cell, res_map = run_cadence(tag, cadence)
+            if base_map is None:
+                base_map = res_map
+            cell["results_match_off"] = res_map == base_map
+            assert cell["results_match_off"], (
+                f"journal cadence {tag} changed query results"
+            )
+            cell["overhead_pct"] = 100.0 * (
+                cell["wall_s"] / jout["off"]["wall_s"] - 1.0
+            ) if tag != "off" else 0.0
+            jout[tag] = cell
+            emit("recovery", f"journal_{tag}_wall_s", cell["wall_s"])
+            emit("recovery", f"journal_{tag}_bytes", cell["journal_bytes"])
+        out["journal"] = jout
+
+        # ---------------- MTTR: crash mid-drain, measure the gap ------------
+        jp = os.path.join(tmp, "mttr.wal")
+        eng1 = make_bfs_engine(g2, capacity=4)
+        _warm(eng1, [q for q, _ in subs[:2]])
+        eng1.runtime.journal = QueryJournal(jp)
+        eng1.runtime.snapshot_every = 4
+        for i, (q, kw) in enumerate(subs):
+            eng1.submit(q, qid=i, **kw)
+        crash_round = 4
+        for _ in range(crash_round):
+            eng1.runtime.run_round()
+        done_at_crash = len(eng1.runtime.results)
+        eng1.runtime.journal.close()  # the process "dies" here
+
+        t0 = time.perf_counter()
+        eng2 = make_bfs_engine(g2, capacity=4)  # cold boot (includes jit)
+        eng2.runtime.journal = QueryJournal(jp)
+        info = recover(eng2.runtime, jp)
+        replay_s = time.perf_counter() - t0
+        rounds = 0
+        while len(eng2.runtime.results) <= done_at_crash:
+            eng2.runtime.run_round()
+            rounds += 1
+            assert rounds < 10_000
+        mttr_s = time.perf_counter() - t0
+        eng2.run_until_drained()
+        assert len(eng2.runtime.results) == len(subs)
+        out["mttr"] = dict(
+            crash_round=crash_round,
+            replayed_done=info["replayed_done"],
+            resumed_from_snapshot=info["resumed_from_snapshot"],
+            resubmitted=info["resubmitted"],
+            replay_s=replay_s,
+            mttr_s=mttr_s,
+            rounds_to_first_retirement=rounds,
+        )
+        emit("recovery", "mttr_replay_s", replay_s)
+        emit("recovery", "mttr_s", mttr_s)
+        emit("recovery", "mttr_rounds_to_first_retirement", rounds)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    _merge_bench_json({"recovery": out})
+    RESULTS.setdefault("recovery", {})["json"] = out
+
+
 TABLES = {
     "hotpath": bench_hotpath,
+    "recovery": bench_recovery,
     "sparsity": bench_sparsity,
     "serving": bench_serving,
     "sharded": bench_sharded,

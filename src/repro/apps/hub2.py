@@ -110,6 +110,14 @@ def build_hub_index(graph: Graph, k: int, capacity: int = 8, backend: str = "coo
     (DESIGN.md §2) — the engine's tile backends build one table per
     semiring on demand, so no table plumbing is needed here.
     """
+    index, _ = _build_hub_index_counted(graph, k, capacity, backend, **kw)
+    return index
+
+
+def _build_hub_index_counted(graph: Graph, k: int, capacity: int = 8,
+                             backend: str = "coo", **kw):
+    """(HubIndex, engine rounds spent building) — the round count is what
+    the store's zero-rebuild guarantee is asserted against."""
     hubs = pick_hubs(graph, k)
     is_hub = jnp.zeros((graph.n,), bool).at[jnp.asarray(hubs)].set(True)
     eng = QuegelEngine(
@@ -134,7 +142,30 @@ def build_hub_index(graph: Graph, k: int, capacity: int = 8, backend: str = "coo
         is_hub=is_hub,
         hub_dist=jnp.asarray(hub_dist),
         core=jnp.asarray(core),
-    )
+    ), eng.stats.rounds
+
+
+def load_or_build_hub_index(store, graph: Graph, k: int, capacity: int = 8,
+                            backend: str = "coo", name: str = "index",
+                            **kw) -> tuple[HubIndex, dict]:
+    """Boot the Hub² index from a durable store (DESIGN.md §10), building
+    and persisting it only on first use.  Returns ``(index, info)`` with
+    ``info = {built, index_rounds, graph_hash}`` — ``index_rounds`` is 0 on
+    a store hit (no index-construction super-rounds ran), which is the
+    whole point: restore is a load, not a rebuild.  The entry is bound to
+    ``graph.content_hash()``: a store written against a different graph
+    (or with a stale index) is rebuilt, never silently served."""
+    ghash = graph.content_hash()
+    if store.exists(name) and store.meta(name).get("graph_hash") == ghash:
+        return store.get(name), {
+            "built": False, "index_rounds": 0, "graph_hash": ghash,
+        }
+    index, rounds = _build_hub_index_counted(graph, k, capacity, backend,
+                                             **kw)
+    store.put(name, index, meta={"graph_hash": ghash, "k": int(k)})
+    return index, {
+        "built": True, "index_rounds": int(rounds), "graph_hash": ghash,
+    }
 
 
 class Hub2PPSP(VertexProgram):

@@ -216,6 +216,11 @@ class QuegelEngine(SlotProgram):
                 to the non-preemptive run.
     preempt_margin : how decisively a waiting key must beat a running rank
                 to trigger suspension (0.0 = any strict win).
+    journal / snapshot_every / straggler / max_retries : fault tolerance
+                (DESIGN.md §10), passed through to the SlotRuntime — a
+                ``QueryJournal`` WAL of the query lifecycle, its in-flight
+                snapshot cadence, a ``StragglerMonitor`` fed per-round
+                wall time, and the poison-quarantine retry bound.
     """
 
     def __init__(
@@ -245,6 +250,10 @@ class QuegelEngine(SlotProgram):
         result_cache: Optional[int] = None,
         preemptive: bool = False,
         preempt_margin: float = 0.0,
+        journal: Any = None,
+        snapshot_every: int = 0,
+        straggler: Any = None,
+        max_retries: int = 2,
     ):
         """``propagate_override`` maps a view name ('default', 'rev', ...)
         to a callable (semiring, x, frontier) -> y — wrapped in a
@@ -346,7 +355,9 @@ class QuegelEngine(SlotProgram):
         self.runtime = SlotRuntime(
             self, self.capacity, scheduler=scheduler, stats=EngineStats(),
             cache_size=result_cache, preemptive=preemptive,
-            preempt_margin=preempt_margin,
+            preempt_margin=preempt_margin, journal=journal,
+            snapshot_every=snapshot_every, straggler=straggler,
+            max_retries=max_retries,
         )
         self._round_args: tuple = ()
         self._collective_model: Optional[dict] = None
@@ -889,25 +900,74 @@ class QuegelEngine(SlotProgram):
                 int(self._frontier_count(self._slots))
             )
 
+    # ---------------------------------------------- fault tolerance hooks
+    def export_tables(self) -> dict:
+        """Prebuilt per-semiring tile tables by view name, for persistence
+        (core/store.py::save_engine_store) — the exact dicts a future
+        engine passes back as ``blocks=`` / ``aux_graphs=(g, blocks)`` to
+        boot with zero table builds.  Empty for backends (coo, sharded)
+        that prepare nothing worth saving."""
+        out = {}
+        for name, be in self._backends.items():
+            t = be.export_tables()
+            if t is not None:
+                out[name] = t
+        return out
+
+    def poison_slot(self, slot: int, value: float = float("nan")) -> int:
+        """Fault injection (DESIGN.md §10): overwrite every float leaf of
+        one slot's state row with ``value``, modeling in-flight memory
+        corruption.  Returns the number of leaves poisoned; raises if the
+        program's state has no float leaves (the int lanes saturate at the
+        FINITE ``semiring.INF`` sentinel and cannot encode a poison).  The
+        runtime detects the non-finite result at extraction and
+        quarantines the query instead of publishing it."""
+        slot = int(slot)
+        n = 0
+
+        def pz(tab):
+            nonlocal n
+            if np.dtype(tab.dtype).kind != "f":
+                return tab
+            arr = np.array(np.asarray(tab))  # gather + host copy
+            arr[slot] = value
+            n += 1
+            out = jnp.asarray(arr)
+            if self.mesh is not None and hasattr(tab, "sharding"):
+                out = jax.device_put(out, tab.sharding)
+            return out
+
+        new_state = jax.tree.map(pz, self._slots["state"])
+        if n == 0:
+            raise ValueError(
+                "cannot poison slot state: no float leaves (int-state "
+                "programs saturate at the finite INF sentinel)"
+            )
+        self._slots = dict(self._slots, state=new_state)
+        return n
+
     # -------------------------------------------------------------- client
     def submit(
         self,
         query,
         *,
+        qid: Optional[int] = None,
         priority: int = 0,
         deadline: float = math.inf,
         budget: int = 0,
     ) -> int:
         """Queue a query (paper: console or batch file).  ``priority`` /
         ``deadline`` / ``budget`` feed the runtime's scheduler and TIMEOUT
-        eviction (DESIGN.md §9); all default to "no policy".
+        eviction (DESIGN.md §9); all default to "no policy".  ``qid`` pins
+        the query id (the recovery supervisor keeps ids stable across
+        restarts); normally left None for auto-assignment.
 
         Query content is staged host-side (numpy) so batched admission can
         stack it without device round-trips; jit converts on dispatch.
         """
         return self.runtime.submit(
             jax.tree.map(np.asarray, query),
-            priority=priority, deadline=deadline, budget=budget,
+            qid=qid, priority=priority, deadline=deadline, budget=budget,
         )
 
     def run_round(self) -> list[tuple[int, Any]]:

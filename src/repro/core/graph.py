@@ -88,6 +88,20 @@ class Graph:
     def num_edges(self) -> int:
         return int(self.src.shape[0])
 
+    def content_hash(self) -> str:
+        """Stable sha256 over the logical graph (sizes + COO edges +
+        weights).  The durable store (core/store.py) binds indexes and tile
+        tables to the graph they were built against via this hash, so a
+        restored index can never be served over a different graph."""
+        import hashlib
+
+        h = hashlib.sha256(f"{self.n}/{self.n_real}".encode())
+        for arr in (self.src, self.dst, self.w):
+            a = np.asarray(arr)
+            h.update(str(a.dtype).encode())
+            h.update(a.tobytes())
+        return h.hexdigest()
+
     # ---------------------------------------------------------------- build
     @staticmethod
     def from_edges(

@@ -46,14 +46,26 @@ the program; the runtime adds policy on top:
 * An opt-in **result cache**: canonicalize+hash the query pytree -> LRU
   of extracted results, serving Quegel's repeated-query workload without
   touching the device.
+* **Crash tolerance** (DESIGN.md §10): an append-only ``QueryJournal``
+  WALs every submit and retirement (checksummed JSON lines, fsynced), and
+  ``snapshot()`` / ``snapshot_every=N`` journals in-flight slots'
+  resumable state through the same ``slot_suspend`` path preemption uses —
+  so a supervisor (launch/supervise.py) can replay the journal after a
+  kill and resume with bit-identical results.  Non-finite slot state
+  detected at extraction is quarantined: fresh re-admission with
+  exponential backoff up to ``max_retries``, then a terminal ``POISONED``
+  status — corruption never spreads to neighbors or kills the drain loop.
 """
 from __future__ import annotations
 
+import base64
 import collections
 import dataclasses
 import hashlib
 import heapq
+import json
 import math
+import os
 import time
 from typing import Any, Optional
 
@@ -63,6 +75,7 @@ import numpy as np
 DONE = "DONE"          # voted done; result extracted
 TIMEOUT = "TIMEOUT"    # superstep budget exhausted; evicted with partial result
 REJECTED = "REJECTED"  # failed slot_validate; never admitted
+POISONED = "POISONED"  # non-finite slot state survived max_retries re-runs
 
 
 class QueryTimeoutError(RuntimeError):
@@ -93,6 +106,16 @@ class SlotStats:
     preemptions: int = 0
     resumes: int = 0
     max_inflight: int = 0
+    # fault tolerance (DESIGN.md §10): journal snapshots taken, retired
+    # queries replayed from the journal on recovery, poison-quarantine
+    # re-admissions and permanent POISONED retirements, rounds abandoned to
+    # an exception, and rounds flagged as wall-time stragglers.
+    snapshots: int = 0
+    replayed: int = 0
+    poison_retries: int = 0
+    poisoned: int = 0
+    round_failures: int = 0
+    straggler_rounds: int = 0
     round_times: list = dataclasses.field(default_factory=list)
     # per-query submit->result latency, appended at completion (bench: p50/p95)
     query_latencies: list = dataclasses.field(default_factory=list)
@@ -128,6 +151,8 @@ class Ticket:
     steps_done: int = 0
     # opaque resumable state from ``slot_suspend`` (None = fresh query)
     resume: Any = None
+    # poison-quarantine re-admissions already consumed (DESIGN.md §10)
+    attempts: int = 0
 
 
 class Scheduler:
@@ -309,6 +334,165 @@ class ResultCache:
         return len(self._d)
 
 
+# ------------------------------------------------------------- query journal
+def _journal_enc(obj):
+    """Pytree -> JSON-able, tagged so decoding is exact: arrays carry
+    dtype/shape/base64 bytes, tuples stay tuples, and plain dataclasses
+    (e.g. an LM ``Request``) record their class by name."""
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return obj
+    if isinstance(obj, dict):
+        if not all(isinstance(k, str) for k in obj):
+            raise ValueError("journal records need string dict keys")
+        return {"t": "d", "v": {k: _journal_enc(v) for k, v in obj.items()}}
+    if isinstance(obj, (list, tuple)):
+        return {"t": "l" if isinstance(obj, list) else "t",
+                "v": [_journal_enc(v) for v in obj]}
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        cls = type(obj)
+        return {"t": "dc", "cls": f"{cls.__module__}:{cls.__qualname__}",
+                "v": {f.name: _journal_enc(getattr(obj, f.name))
+                      for f in dataclasses.fields(obj)}}
+    arr = np.asarray(obj)
+    if arr.dtype.kind not in "fiub":
+        arr = arr.astype(np.float32)
+    return {"t": "a", "dtype": str(arr.dtype), "shape": list(arr.shape),
+            "b64": base64.b64encode(arr.tobytes()).decode("ascii")}
+
+
+def _journal_dec(obj):
+    if not isinstance(obj, dict):
+        return obj
+    t = obj["t"]
+    if t == "d":
+        return {k: _journal_dec(v) for k, v in obj["v"].items()}
+    if t == "l":
+        return [_journal_dec(v) for v in obj["v"]]
+    if t == "t":
+        return tuple(_journal_dec(v) for v in obj["v"])
+    if t == "a":
+        buf = base64.b64decode(obj["b64"])
+        return np.frombuffer(buf, dtype=np.dtype(obj["dtype"])).reshape(
+            obj["shape"]).copy()
+    if t == "dc":
+        from repro.core.store import _resolve_class
+
+        cls = _resolve_class(obj["cls"])
+        return cls(**{k: _journal_dec(v) for k, v in obj["v"].items()})
+    raise ValueError(f"unknown journal node type {t!r}")
+
+
+def result_hash(result) -> str:
+    """Stable digest of a result pytree (journaled at retirement so a
+    recovered run can be audited against the uninterrupted one)."""
+    return hashlib.sha256(
+        json.dumps(_journal_enc(result), sort_keys=True,
+                   separators=(",", ":")).encode()
+    ).hexdigest()
+
+
+class QueryJournal:
+    """Append-only write-ahead log of the query lifecycle (DESIGN.md §10).
+
+    One JSON record per line, prefixed with its own sha256 — replay stops
+    at the first torn or corrupt line, so a crash mid-append loses at most
+    the record being written.  Three record types:
+
+      submit   {qid, seq, priority, deadline, budget, query}
+      retire   {qid, status, steps, result, result_hash}
+      snapshot {qid, seq, priority, deadline, budget, steps, payload}
+               (periodic in-flight state via ``slot_suspend``; the newest
+               snapshot per qid wins on replay)
+
+    ``fsync=True`` (default) makes every append durable before the runtime
+    proceeds — the crash-safety contract; benches can relax it to measure
+    the fsync tax.
+    """
+
+    def __init__(self, path: str, *, fsync: bool = True):
+        self.path = str(path)
+        self.fsync = bool(fsync)
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        self._f = open(self.path, "ab")
+        self.records_written = 0
+
+    def append(self, rec: dict) -> None:
+        body = json.dumps(rec, separators=(",", ":"))
+        digest = hashlib.sha256(body.encode()).hexdigest()
+        self._f.write(f"{digest} {body}\n".encode())
+        self._f.flush()
+        if self.fsync:
+            os.fsync(self._f.fileno())
+        self.records_written += 1
+
+    def submit(self, qid: int, query, *, priority: int, deadline: float,
+               budget: int, seq: int) -> None:
+        self.append({
+            "type": "submit", "qid": int(qid), "seq": int(seq),
+            "priority": int(priority),
+            "deadline": None if math.isinf(deadline) else float(deadline),
+            "budget": int(budget), "query": _journal_enc(query),
+        })
+
+    def retire(self, qid: int, status: str, steps: int, result) -> None:
+        enc = _journal_enc(result)
+        self.append({
+            "type": "retire", "qid": int(qid), "status": str(status),
+            "steps": int(steps), "result": enc,
+            "result_hash": hashlib.sha256(
+                json.dumps(enc, sort_keys=True,
+                           separators=(",", ":")).encode()).hexdigest(),
+        })
+
+    def snapshot(self, ticket: "Ticket") -> None:
+        self.append({
+            "type": "snapshot", "qid": int(ticket.qid), "seq": int(ticket.seq),
+            "priority": int(ticket.priority),
+            "deadline": (None if math.isinf(ticket.deadline)
+                         else float(ticket.deadline)),
+            "budget": int(ticket.budget), "steps": int(ticket.steps_done),
+            "payload": _journal_enc(ticket.resume),
+        })
+
+    def close(self) -> None:
+        self._f.close()
+
+    @property
+    def bytes_written(self) -> int:
+        self._f.flush()
+        return os.path.getsize(self.path)
+
+    @staticmethod
+    def replay(path: str) -> list[dict]:
+        """Decoded records in append order, stopping at the first line that
+        is torn or fails its checksum (everything before it is intact by
+        construction).  A missing file replays as empty."""
+        if not os.path.exists(path):
+            return []
+        out = []
+        with open(path, "rb") as f:
+            for raw in f:
+                line = raw.decode("utf-8", errors="replace")
+                digest, _, body = line.rstrip("\n").partition(" ")
+                if not body or not raw.endswith(b"\n"):
+                    break
+                if hashlib.sha256(body.encode()).hexdigest() != digest:
+                    break
+                rec = json.loads(body)
+                if rec["type"] == "submit":
+                    rec["query"] = _journal_dec(rec["query"])
+                elif rec["type"] == "retire":
+                    rec["result"] = _journal_dec(rec["result"])
+                elif rec["type"] == "snapshot":
+                    rec["payload"] = _journal_dec(rec["payload"])
+                if rec.get("deadline") is None and rec["type"] != "retire":
+                    rec["deadline"] = math.inf
+                out.append(rec)
+        return out
+
+
 # ------------------------------------------------------------------ protocol
 @dataclasses.dataclass
 class RoundOutcome:
@@ -391,12 +575,28 @@ class SlotRuntime:
         cache_size: Optional[int] = None,
         preemptive: bool = False,
         preempt_margin: float = 0.0,
+        journal: Optional[QueryJournal] = None,
+        snapshot_every: int = 0,
+        straggler: Any = None,
+        max_retries: int = 2,
     ):
+        """Fault-tolerance knobs (DESIGN.md §10): ``journal`` WALs every
+        submit/retire (and snapshot); ``snapshot_every=N`` journals all
+        live slots' resumable state every N executed rounds (0 = only on
+        explicit ``snapshot()``); ``straggler`` is a
+        ``train/fault.py::StragglerMonitor`` fed per-round wall time;
+        ``max_retries`` bounds fresh re-admissions of a query whose
+        extracted result carries non-finite floats before it retires as
+        ``POISONED``."""
         self.program = program
         self.capacity = int(capacity)
         self.scheduler = make_scheduler(scheduler)
         self.preemptive = bool(preemptive)
         self.preempt_margin = float(preempt_margin)
+        self.journal = journal
+        self.snapshot_every = int(snapshot_every)
+        self.straggler = straggler
+        self.max_retries = int(max_retries)
         if self.preemptive and not self.scheduler.supports_preemption:
             raise ValueError(
                 f"scheduler '{self.scheduler.name}' cannot drive preemption: "
@@ -422,6 +622,12 @@ class SlotRuntime:
         self._n_suspended = 0
         self._next_qid = 0
         self._seq = 0
+        # poison-quarantine backoff: (release_tick, ticket) pairs waiting
+        # out their 2**attempts-round delay.  _ticks advances on EVERY
+        # run_round call (executed or not) so a drain with only backoff
+        # tickets left still makes progress.
+        self._retry_q: list[tuple[int, Ticket]] = []
+        self._ticks = 0
 
     # ------------------------------------------------------------- client
     def submit(
@@ -439,6 +645,7 @@ class SlotRuntime:
         if qid is None:
             qid = self._next_qid
             self._next_qid += 1
+        self._next_qid = max(self._next_qid, qid + 1)
         t = time.perf_counter()
         if self.cache is not None:
             key = self.program.cache_key(query)
@@ -450,8 +657,19 @@ class SlotRuntime:
                 self.stats.cache_hits += 1
                 self.stats.queries_done += 1
                 self.stats.query_latencies.append(time.perf_counter() - t)
+                if self.journal is not None:
+                    # WAL the full lifecycle even for a cache hit, so replay
+                    # needs no cache-state reconstruction
+                    self.journal.submit(qid, query, priority=priority,
+                                        deadline=deadline, budget=budget,
+                                        seq=self._seq)
+                    self.journal.retire(qid, DONE, 0, hit)
                 return qid
             self._qid_key[qid] = key
+        if self.journal is not None:
+            self.journal.submit(qid, query, priority=priority,
+                                deadline=deadline, budget=budget,
+                                seq=self._seq)
         self.scheduler.push(
             Ticket(qid, query, int(priority), float(deadline), int(budget),
                    submit_t=t, seq=self._seq)
@@ -460,7 +678,15 @@ class SlotRuntime:
         return qid
 
     def pending(self) -> int:
-        return len(self.scheduler)
+        return len(self.scheduler) + len(self._retry_q)
+
+    def slot_of(self, qid: int) -> Optional[int]:
+        """The live slot currently running ``qid`` (None if not live) —
+        fault injection targets a query, not a slot index."""
+        for s, tk in self._slot_ticket.items():
+            if tk.qid == qid and self.live[s]:
+                return s
+        return None
 
     def inflight(self) -> int:
         """Queries holding state right now: live slots + suspended.  Can
@@ -477,17 +703,41 @@ class SlotRuntime:
         for s in slots:
             if not (0 <= s < self.capacity) or not self.live[s]:
                 raise ValueError(f"cannot suspend slot {s}: not live")
+        self.stats.preemptions += len(self._suspend_into_queue(slots))
+
+    def _suspend_into_queue(self, slots: list[int]) -> list[Ticket]:
+        """Shared core of ``suspend`` and ``snapshot``: collect resumable
+        state, free the slots, re-queue as resume tickets.  Returns the
+        pushed tickets (payload attached) so callers can journal them."""
         payloads = self.program.slot_suspend(slots)
+        pushed = []
         for s, payload in zip(slots, payloads):
             tk = self._slot_ticket.pop(s)
             self.live[s] = False
-            self.scheduler.push(
-                dataclasses.replace(
-                    tk, resume=payload, steps_done=int(self._last_steps[s])
-                )
+            tk = dataclasses.replace(
+                tk, resume=payload, steps_done=int(self._last_steps[s])
             )
+            self.scheduler.push(tk)
             self._n_suspended += 1
-            self.stats.preemptions += 1
+            pushed.append(tk)
+        return pushed
+
+    def snapshot(self) -> int:
+        """Journal a resumable snapshot of every live slot (DESIGN.md §10)
+        and re-queue them as resume tickets.  Reuses the ``slot_suspend``
+        path, so by the suspend/resume parity invariant (§9: suspension ≡
+        never admitted, modulo steps charged) taking a snapshot never
+        changes any query's result, status, or step count; on recovery the
+        journaled payload re-enters admission directly.  Returns the number
+        of slots snapshotted."""
+        live = [s for s in range(self.capacity) if self.live[s]]
+        if not live:
+            return 0
+        for tk in self._suspend_into_queue(live):
+            if self.journal is not None:
+                self.journal.snapshot(tk)
+        self.stats.snapshots += 1
+        return len(live)
 
     def _admit_from_queue(self, free: list[int], admitted: dict) -> None:
         """Pop tickets into free slots.  Resume tickets skip validation
@@ -505,6 +755,8 @@ class SlotRuntime:
                     self.steps[tk.qid] = 0
                     self.stats.rejected += 1
                     self._qid_key.pop(tk.qid, None)  # never enters cache
+                    if self.journal is not None:
+                        self.journal.retire(tk.qid, status, 0, res)
                     continue
             slot = free.pop()
             if tk.resume is None:
@@ -550,12 +802,60 @@ class SlotRuntime:
             self.suspend(victims)
             self._admit_from_queue(victims, admitted)
 
+    @staticmethod
+    def _has_nonfinite(result) -> bool:
+        """True when any float leaf of ``result`` holds NaN/Inf — the
+        poison signature (the int lanes saturate at the FINITE sentinel
+        ``semiring.INF``, so non-finite floats are unambiguous corruption,
+        DESIGN.md §10)."""
+        import jax
+
+        for leaf in jax.tree.leaves(result):
+            arr = np.asarray(leaf)
+            if arr.dtype.kind == "f" and not np.isfinite(arr).all():
+                return True
+        return False
+
+    def _abandon_live_slots(self) -> None:
+        """An exception escaped the program mid-round: the device state of
+        every live slot is untrusted and the host liveness mirror would
+        otherwise desynchronize.  Mark all live slots dead, best-effort
+        clear device liveness, and re-queue their tickets as FRESH
+        admissions (resume payloads were consumed; deterministic programs
+        recompute the identical result, and restarting the step meter at 0
+        keeps final step counts equal to an uninterrupted run)."""
+        live = [s for s in range(self.capacity) if self.live[s]]
+        if not live:
+            return
+        try:
+            self.program.slot_evict(live)
+        except Exception:
+            pass  # the device may be gone entirely; host cleanup still runs
+        for s in live:
+            tk = self._slot_ticket.pop(s)
+            self.live[s] = False
+            self.scheduler.push(
+                dataclasses.replace(tk, resume=None, steps_done=0)
+            )
+        self.stats.round_failures += 1
+
+    def _release_retries(self) -> None:
+        ready = [(rt, tk) for rt, tk in self._retry_q if rt <= self._ticks]
+        if not ready:
+            return
+        self._retry_q = [(rt, tk) for rt, tk in self._retry_q
+                         if rt > self._ticks]
+        for _, tk in ready:
+            self.scheduler.push(tk)
+
     def run_round(self) -> Optional[list[tuple[int, Any, str]]]:
         """Admit (+ preempt) + one program round + retire.  Returns the
         retired [(qid, result, status)] — empty if the round completed
         nothing — or None when there was nothing to run (no live slots,
         nothing admissible)."""
         t0 = time.perf_counter()
+        self._ticks += 1
+        self._release_retries()
         admitted: dict[int, Any] = {}
         free = [i for i in range(self.capacity) if not self.live[i]]
         self._admit_from_queue(free, admitted)
@@ -565,31 +865,66 @@ class SlotRuntime:
             return None
         self.stats.max_inflight = max(self.stats.max_inflight, self.inflight())
         occupancy = int(self.live.sum())
-        out = self.program.slot_round(admitted)
-        t_done = time.perf_counter()
-        done = np.asarray(out.done)
-        steps = np.asarray(out.steps)
-        # refresh the per-slot superstep mirror for live slots only (a free
-        # slot's device counter is stale and must not leak into a future
-        # suspension of whoever reuses the slot)
-        self._last_steps[self.live] = steps[self.live]
-        finished = [int(s) for s in np.nonzero(done & self.live)[0]]
-        evicted = [
-            s
-            for s in range(self.capacity)
-            if self.live[s]
-            and not done[s]
-            and self._slot_ticket[s].budget > 0
-            and int(steps[s]) >= self._slot_ticket[s].budget
-        ]
-        if evicted:
-            self.program.slot_evict(evicted)
-        retiring = finished + evicted
-        collected = self.program.slot_collect(retiring) if retiring else []
+        # Exception safety (DESIGN.md §10): if the program blows up inside
+        # the round or the extraction, restore host/device liveness
+        # coherence before re-raising so a supervisor can keep draining.
+        try:
+            out = self.program.slot_round(admitted)
+            t_done = time.perf_counter()
+            done = np.asarray(out.done)
+            steps = np.asarray(out.steps)
+            # refresh the per-slot superstep mirror for live slots only (a
+            # free slot's device counter is stale and must not leak into a
+            # future suspension of whoever reuses the slot)
+            self._last_steps[self.live] = steps[self.live]
+            finished = [int(s) for s in np.nonzero(done & self.live)[0]]
+            evicted = [
+                s
+                for s in range(self.capacity)
+                if self.live[s]
+                and not done[s]
+                and self._slot_ticket[s].budget > 0
+                and int(steps[s]) >= self._slot_ticket[s].budget
+            ]
+            if evicted:
+                self.program.slot_evict(evicted)
+            retiring = finished + evicted
+            collected = (
+                self.program.slot_collect(retiring) if retiring else []
+            )
+        except Exception:
+            self._abandon_live_slots()
+            raise
         completed: list[tuple[int, Any, str]] = []
         for slot, res in zip(retiring, collected):
             tk = self._slot_ticket.pop(slot)
             self.live[slot] = False
+            if self._has_nonfinite(res):
+                # Poison quarantine (DESIGN.md §10): the slot's state went
+                # non-finite (injected fault or numerical blowup).  Retry
+                # from scratch with exponential backoff — a FRESH ticket,
+                # so the step meter restarts and neighbors are untouched —
+                # and only after max_retries give up as POISONED.
+                if tk.attempts < self.max_retries:
+                    retry = dataclasses.replace(
+                        tk, resume=None, steps_done=0,
+                        attempts=tk.attempts + 1,
+                    )
+                    self._retry_q.append(
+                        (self._ticks + 2 ** tk.attempts, retry)
+                    )
+                    self.stats.poison_retries += 1
+                    continue
+                self.results[tk.qid] = res
+                self.status[tk.qid] = POISONED
+                self.steps[tk.qid] = int(steps[slot])
+                self.stats.poisoned += 1
+                self._qid_key.pop(tk.qid, None)  # never enters the cache
+                if self.journal is not None:
+                    self.journal.retire(tk.qid, POISONED, int(steps[slot]),
+                                        res)
+                completed.append((tk.qid, res, POISONED))
+                continue
             status = DONE if slot in finished else TIMEOUT
             self.results[tk.qid] = res
             self.status[tk.qid] = status
@@ -604,17 +939,70 @@ class SlotRuntime:
             else:
                 self.stats.timeouts += 1
                 self._qid_key.pop(tk.qid, None)
+            if self.journal is not None:
+                self.journal.retire(tk.qid, status, int(steps[slot]), res)
             completed.append((tk.qid, res, status))
         self.stats.rounds += 1
         self.stats.slot_occupancy.append(occupancy)
         self.program.slot_observe()
-        self.stats.round_times.append(time.perf_counter() - t0)
+        dt = time.perf_counter() - t0
+        self.stats.round_times.append(dt)
+        if self.straggler is not None and self.straggler.record(
+                self.stats.rounds, dt):
+            self.stats.straggler_rounds += 1
+        if (self.snapshot_every > 0 and self.journal is not None
+                and self.stats.rounds % self.snapshot_every == 0):
+            self.snapshot()
         return completed
+
+    # ------------------------------------------------------------ recovery
+    def restore_retired(self, qid: int, status: str, result, steps: int,
+                        ) -> None:
+        """Install a journal-replayed terminal query without re-running it
+        (launch/supervise.py).  Counters advance as the original run did so
+        stats stay comparable across a crash."""
+        self.results[qid] = result
+        self.status[qid] = status
+        self.steps[qid] = int(steps)
+        self.stats.replayed += 1
+        if status == DONE:
+            self.stats.queries_done += 1
+            self.stats.supersteps_total += int(steps)
+        elif status == TIMEOUT:
+            self.stats.timeouts += 1
+            self.stats.supersteps_total += int(steps)
+        elif status == REJECTED:
+            self.stats.rejected += 1
+        elif status == POISONED:
+            self.stats.poisoned += 1
+        self._next_qid = max(self._next_qid, qid + 1)
+
+    def restore_pending(self, qid: int, query, *, priority: int = 0,
+                        deadline: float = math.inf, budget: int = 0,
+                        seq: Optional[int] = None, payload: Any = None,
+                        steps_done: int = 0) -> None:
+        """Re-enter a journal-replayed in-flight query: with a snapshot
+        ``payload`` it resumes through batched admission exactly like a
+        suspended query (steps charged so far intact); without one it
+        re-runs from scratch under its original scheduling attributes and
+        qid.  Does NOT journal — the original submit record is already in
+        the WAL being replayed."""
+        seq = self._seq if seq is None else int(seq)
+        tk = Ticket(int(qid), query, int(priority), float(deadline),
+                    int(budget), submit_t=time.perf_counter(), seq=seq,
+                    steps_done=int(steps_done), resume=payload)
+        self.scheduler.push(tk)
+        if payload is not None:
+            # _admit_from_queue decrements the suspended count when a
+            # resume ticket re-enters; balance it here.
+            self._n_suspended += 1
+        self._next_qid = max(self._next_qid, qid + 1)
+        self._seq = max(self._seq, seq + 1)
 
     def run_until_drained(self, max_rounds: int = 100_000) -> dict[int, Any]:
         """Batch-querying mode (paper scenario ii)."""
         rounds = 0
-        while (len(self.scheduler) or self.live.any()) and rounds < max_rounds:
+        while (self.pending() or self.live.any()) and rounds < max_rounds:
             self.run_round()
             rounds += 1
         return dict(self.results)

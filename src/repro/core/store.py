@@ -1,0 +1,371 @@
+"""Durable graph/index store: atomic, content-hashed, self-describing.
+
+Index construction (Hub²) and graph ingest dominate cold-start; the paper's
+deployment is a long-lived server, so both must survive process death.  This
+module promotes ``train/checkpoint.py``'s discipline — write to a temp
+directory, hash every file, fsync the manifest, atomic rename — into a
+general object store the engine boots from (DESIGN.md §10):
+
+* **Self-describing**: each entry's manifest records a recursive *spec* of
+  the stored pytree — plain scalars, dicts/lists/tuples, and registered
+  JAX dataclasses (``Graph``, ``BlockSparse``, ``HubIndex``) with their
+  static fields split out — so ``get`` rebuilds the object with NO template
+  and no pickle (classes resolve by name, restricted to ``repro.*``).
+* **Mesh-shape-agnostic sharding**: ``put(..., shards=k, shard_dim=V)``
+  splits every leaf whose trailing axis is the vertex dimension into k
+  per-shard npz files.  Arrays are *logical*: ``get`` reassembles the full
+  leaf, so a store written by an 8-device engine restores on 4 devices or
+  1 (and vice versa) — the engine's ``device_put`` reshards on admission.
+* **Crash-safe**: a ``put`` interrupted at any point leaves either the old
+  complete entry or a dead temp dir; ``get`` refuses any entry whose
+  manifest is missing, marked incomplete, or whose file hashes mismatch.
+
+``train/checkpoint.py`` shares the low-level helpers (``commit_dir``,
+``write_manifest``, ``verify_manifest``) so there is exactly one atomic
+format in the repo.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import importlib
+import json
+import os
+import re
+import shutil
+import tempfile
+import time
+from typing import Any, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class StoreError(RuntimeError):
+    """Entry missing, incomplete, corrupt, or unserializable."""
+
+
+_NAME_RE = re.compile(r"^[A-Za-z0-9][A-Za-z0-9._-]*$")
+
+
+# ------------------------------------------------------- atomic dir helpers
+def sha256_file(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def write_manifest(dir_: str, manifest: dict) -> None:
+    """Write manifest.json with ``complete`` asserted, flushed and fsynced —
+    the commit record of the atomic-write protocol."""
+    manifest = dict(manifest, complete=True)
+    with open(os.path.join(dir_, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def verify_manifest(dir_: str) -> Optional[dict]:
+    """The manifest if the entry is complete and every file hash checks out,
+    else None.  Never raises — a torn entry reads as absent."""
+    mpath = os.path.join(dir_, "manifest.json")
+    if not os.path.exists(mpath):
+        return None
+    try:
+        with open(mpath) as f:
+            m = json.load(f)
+        if not m.get("complete"):
+            return None
+        for fname, digest in m["files"].items():
+            if sha256_file(os.path.join(dir_, fname)) != digest:
+                return None
+        return m
+    except Exception:
+        return None
+
+
+def commit_dir(tmp: str, final: str) -> str:
+    """Atomically replace ``final`` with ``tmp`` (rename is the commit
+    point; an existing complete entry is removed first)."""
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+# --------------------------------------------------------- spec (de)coding
+def _class_ref(cls: type) -> str:
+    return f"{cls.__module__}:{cls.__qualname__}"
+
+
+def _resolve_class(ref: str) -> type:
+    mod, _, qual = ref.partition(":")
+    if not (mod == "repro" or mod.startswith("repro.")):
+        raise StoreError(f"refusing to resolve class outside repro.*: {ref}")
+    obj: Any = importlib.import_module(mod)
+    for part in qual.split("."):
+        obj = getattr(obj, part)
+    if not (isinstance(obj, type) and dataclasses.is_dataclass(obj)):
+        raise StoreError(f"{ref} is not a dataclass")
+    return obj
+
+
+def _is_array(x) -> bool:
+    return isinstance(x, (np.ndarray, jnp.ndarray)) or (
+        hasattr(x, "__array__") and hasattr(x, "dtype") and hasattr(x, "shape")
+    )
+
+
+def _spec_of(obj, arrays: dict, prefix: str) -> dict:
+    """Recursively describe ``obj``, collecting array leaves into ``arrays``
+    keyed by their pytree path."""
+    if obj is None:
+        return {"t": "none"}
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        static, fields = {}, {}
+        for f in dataclasses.fields(obj):
+            v = getattr(obj, f.name)
+            if f.metadata.get("static"):
+                static[f.name] = v  # must be JSON-able (ints, strs, ...)
+            else:
+                fields[f.name] = _spec_of(v, arrays, f"{prefix}.{f.name}")
+        return {"t": "dc", "cls": _class_ref(type(obj)), "static": static,
+                "fields": fields}
+    if isinstance(obj, dict):
+        if not all(isinstance(k, str) for k in obj):
+            raise StoreError(f"dict at {prefix!r} has non-string keys")
+        return {"t": "dict", "items": {
+            k: _spec_of(v, arrays, f"{prefix}.{k}") for k, v in obj.items()
+        }}
+    if isinstance(obj, (list, tuple)):
+        return {"t": "list" if isinstance(obj, list) else "tuple", "items": [
+            _spec_of(v, arrays, f"{prefix}[{i}]") for i, v in enumerate(obj)
+        ]}
+    if isinstance(obj, (bool, int, float, str)):
+        return {"t": "py", "v": obj}
+    if _is_array(obj) or np.isscalar(obj):
+        arr = np.asarray(obj)
+        arrays[prefix] = arr
+        return {"t": "arr", "key": prefix, "dtype": str(arr.dtype),
+                "shape": list(arr.shape)}
+    raise StoreError(f"cannot serialize {type(obj).__name__} at {prefix!r}")
+
+
+def _build_from_spec(spec: dict, flat: dict):
+    t = spec["t"]
+    if t == "none":
+        return None
+    if t == "py":
+        return spec["v"]
+    if t == "arr":
+        arr = flat[spec["key"]]
+        want = np.dtype(spec["dtype"])
+        if arr.dtype != want:
+            arr = arr.astype(want)  # fp32-on-disk dtypes (bf16...) cast back
+        return jnp.asarray(arr)
+    if t == "dict":
+        return {k: _build_from_spec(s, flat) for k, s in spec["items"].items()}
+    if t == "list":
+        return [_build_from_spec(s, flat) for s in spec["items"]]
+    if t == "tuple":
+        return tuple(_build_from_spec(s, flat) for s in spec["items"])
+    if t == "dc":
+        cls = _resolve_class(spec["cls"])
+        kw = dict(spec["static"])
+        kw.update(
+            {k: _build_from_spec(s, flat) for k, s in spec["fields"].items()}
+        )
+        return cls(**kw)
+    raise StoreError(f"unknown spec node type {t!r}")
+
+
+def _to_disk_dtype(arr: np.ndarray) -> np.ndarray:
+    # ml_dtypes (bf16, fp8...) -> fp32 on disk; spec records the original
+    # dtype so _build_from_spec casts back on load.
+    if arr.dtype.kind not in "fiub":
+        return arr.astype(np.float32)
+    return arr
+
+
+# ------------------------------------------------------------------- store
+class Store:
+    """A directory of named, atomically-written, content-hashed entries.
+
+    Layout::
+
+        root/<name>/manifest.json   spec + per-file sha256 + complete flag
+        root/<name>/common.npz      unsharded array leaves
+        root/<name>/shard_000.npz   per-shard slices of V-trailing leaves
+    """
+
+    def __init__(self, root: str):
+        self.root = str(root)
+        os.makedirs(self.root, exist_ok=True)
+
+    def _dir(self, name: str) -> str:
+        if not _NAME_RE.match(name):
+            raise StoreError(f"bad entry name {name!r}")
+        return os.path.join(self.root, name)
+
+    # ------------------------------------------------------------- write
+    def put(self, name: str, obj, *, shards: int = 1,
+            shard_dim: Optional[int] = None, meta: Optional[dict] = None,
+            ) -> str:
+        """Serialize ``obj`` under ``name``; atomic against crashes.
+
+        ``shards``/``shard_dim``: split every array leaf whose trailing axis
+        equals ``shard_dim`` (the padded vertex count, which must divide by
+        ``shards``) into per-shard files — written as k small files so an
+        SPMD boot can read shards it owns first, reassembled logically by
+        ``get`` regardless of the restoring mesh shape.
+        """
+        shards = int(shards)
+        if shards > 1:
+            if shard_dim is None:
+                raise StoreError("shards > 1 needs shard_dim (the V axis)")
+            if shard_dim % shards:
+                raise StoreError(
+                    f"shard_dim={shard_dim} not divisible by shards={shards}"
+                )
+        arrays: dict[str, np.ndarray] = {}
+        spec = _spec_of(obj, arrays, "$")
+        final = self._dir(name)
+        tmp = tempfile.mkdtemp(dir=self.root, prefix=f".tmp_{name}_")
+        try:
+            common, sharded = {}, {}
+            for key, arr in arrays.items():
+                arr = _to_disk_dtype(arr)
+                if (shards > 1 and arr.ndim >= 1
+                        and arr.shape[-1] == shard_dim):
+                    sharded[key] = arr
+                else:
+                    common[key] = arr
+            files: dict[str, str] = {}
+
+            def dump(fname: str, d: dict) -> None:
+                fpath = os.path.join(tmp, fname)
+                np.savez(fpath, **d)
+                files[fname] = sha256_file(fpath)
+
+            dump("common.npz", common)
+            for i in range(shards if sharded else 0):
+                blk = {
+                    k: a[..., i * (a.shape[-1] // shards):
+                         (i + 1) * (a.shape[-1] // shards)]
+                    for k, a in sharded.items()
+                }
+                dump(f"shard_{i:03d}.npz", blk)
+            manifest = {
+                "name": name,
+                "time": time.time(),
+                "spec": spec,
+                "files": files,
+                "shards": shards if sharded else 1,
+                "sharded_keys": sorted(sharded),
+                "shard_dim": shard_dim if sharded else None,
+                "meta": dict(meta or {}),
+            }
+            write_manifest(tmp, manifest)
+            return commit_dir(tmp, final)
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+
+    # -------------------------------------------------------------- read
+    def manifest(self, name: str) -> Optional[dict]:
+        return verify_manifest(self._dir(name))
+
+    def exists(self, name: str) -> bool:
+        return self.manifest(name) is not None
+
+    __contains__ = exists
+
+    def names(self) -> list[str]:
+        out = []
+        for d in sorted(os.listdir(self.root)):
+            if not d.startswith(".") and self.exists(d):
+                out.append(d)
+        return out
+
+    def meta(self, name: str) -> dict:
+        m = self.manifest(name)
+        if m is None:
+            raise StoreError(f"no valid entry {name!r} in {self.root}")
+        return m.get("meta", {})
+
+    def get(self, name: str):
+        """Rebuild the stored object (template-free); raises ``StoreError``
+        on a missing/incomplete/corrupt entry."""
+        path = self._dir(name)
+        m = verify_manifest(path)
+        if m is None:
+            raise StoreError(
+                f"no valid entry {name!r} in {self.root} (missing, "
+                "incomplete, or hash mismatch)"
+            )
+        flat: dict[str, np.ndarray] = {}
+        with np.load(os.path.join(path, "common.npz")) as z:
+            flat.update({k: z[k] for k in z.files})
+        sharded_keys = m.get("sharded_keys", [])
+        if sharded_keys:
+            parts: dict[str, list] = {k: [] for k in sharded_keys}
+            for i in range(m["shards"]):
+                with np.load(os.path.join(path, f"shard_{i:03d}.npz")) as z:
+                    for k in sharded_keys:
+                        parts[k].append(z[k])
+            for k, ps in parts.items():
+                flat[k] = np.concatenate(ps, axis=-1)
+        return _build_from_spec(m["spec"], flat)
+
+    def delete(self, name: str) -> None:
+        path = self._dir(name)
+        if os.path.exists(path):
+            shutil.rmtree(path)
+
+
+# ----------------------------------------------- engine boot-state helpers
+def save_engine_store(store: Store, graph, *, index=None, aux_graphs=None,
+                      tables=None, shards: int = 1) -> dict:
+    """Persist everything a serving engine needs to boot without rebuild:
+    the graph, an optional prebuilt index (e.g. ``HubIndex``), named aux
+    propagation views, and prebuilt per-semiring tile tables (from
+    ``QuegelEngine.export_tables()``).  Entries are bound to the graph by
+    its content hash so a restored index is never applied to a different
+    graph.  Returns {entry name: meta}."""
+    ghash = graph.content_hash()
+    meta = {"graph_hash": ghash}
+    written = {}
+    store.put("graph", graph, shards=shards, shard_dim=graph.n, meta=meta)
+    written["graph"] = meta
+    if index is not None:
+        store.put("index", index, shards=shards, shard_dim=graph.n, meta=meta)
+        written["index"] = meta
+    if aux_graphs:
+        store.put("aux_graphs", dict(aux_graphs), shards=shards,
+                  shard_dim=graph.n, meta=meta)
+        written["aux_graphs"] = meta
+    if tables:
+        store.put("tables", dict(tables), meta=meta)
+        written["tables"] = meta
+    return written
+
+
+def load_engine_store(store: Store) -> dict:
+    """Inverse of :func:`save_engine_store`: {'graph', 'index',
+    'aux_graphs', 'tables'} with None/{} for absent entries.  Refuses
+    entries whose recorded graph hash does not match the stored graph."""
+    graph = store.get("graph")
+    ghash = graph.content_hash()
+    out = {"graph": graph, "index": None, "aux_graphs": {}, "tables": {}}
+    for name in ("index", "aux_graphs", "tables"):
+        if store.exists(name):
+            rec = store.meta(name).get("graph_hash")
+            if rec is not None and rec != ghash:
+                raise StoreError(
+                    f"store entry '{name}' was built against graph "
+                    f"{rec[:12]}, not {ghash[:12]}: rebuild or clear it"
+                )
+            out[name] = store.get(name)
+    return out

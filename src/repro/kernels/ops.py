@@ -84,6 +84,12 @@ class PropagateBackend:
     def propagate(self, sr: Semiring, x: jnp.ndarray, frontier=None) -> jnp.ndarray:
         raise NotImplementedError
 
+    def export_tables(self):
+        """Prepared per-semiring state worth persisting (core/store.py):
+        ``{sr.name: BlockSparse}`` for tile backends, else None.  A future
+        engine passes the dict back as ``blocks=`` to skip the rebuild."""
+        return None
+
 
 class CooBackend(PropagateBackend):
     """Segment-reduction over the destination-sorted COO view.
@@ -150,6 +156,11 @@ class _TileBackend(PropagateBackend):
             if _trace_state_clean():
                 self.tables[sr.name] = t
         return t
+
+    def export_tables(self):
+        if self._shared is not None:
+            return self._shared
+        return dict(self.tables) or None
 
     def propagate(self, sr, x, frontier=None):
         bs = self.table_for(sr)

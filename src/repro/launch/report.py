@@ -271,6 +271,60 @@ def bench_tables(path: str) -> str:
             "results are asserted identical to the single-device engine "
             "in-run.",
         ]
+    rc = bench.get("recovery")
+    if rc:
+        meta = rc.get("meta", {})
+        lines += [
+            "",
+            "## Recovery (DESIGN.md §10): durable store, journal, MTTR"
+            + (" (quick)" if meta.get("quick") else ""),
+        ]
+        r = rc.get("restore")
+        if r:
+            lines += [
+                "",
+                f"**Store restore vs cold start (Hub² index):** cold "
+                f"{fmt_s(r['cold_start_s'])} ({r['index_rounds_cold']} "
+                f"index super-rounds) vs restore {fmt_s(r['restore_s'])} "
+                f"(0 rounds, {fmt_bytes(r['store_bytes'])} on disk) — "
+                f"**{r['speedup']:.0f}x** faster boot.",
+            ]
+        j = rc.get("journal")
+        if j:
+            lines += [
+                "",
+                "| cadence | wall | overhead | journal bytes | records | "
+                "snapshots |",
+                "|---|---|---|---|---|---|",
+            ]
+            for tag in ("off", "wal", "snap8", "snap1"):
+                m = j.get(tag)
+                if not m:
+                    continue
+                lines.append(
+                    f"| {tag} | {fmt_s(m['wall_s'])} | "
+                    f"{m['overhead_pct']:.0f}% | "
+                    f"{fmt_bytes(m['journal_bytes'])} | "
+                    f"{m['journal_records']} | {m['snapshots']} |"
+                )
+            lines += [
+                "",
+                "qid→result maps asserted identical across all cadences "
+                "in-run (journaling and snapshot/resume never change "
+                "answers).",
+            ]
+        m = rc.get("mttr")
+        if m:
+            lines += [
+                "",
+                f"**MTTR** (crash at round {m['crash_round']}, journal "
+                f"replay on a cold engine): replay {fmt_s(m['replay_s'])} "
+                f"({m['replayed_done']} retired replayed, "
+                f"{m['resumed_from_snapshot']} resumed from snapshot, "
+                f"{m['resubmitted']} re-run), first retirement "
+                f"{fmt_s(m['mttr_s'])} after boot "
+                f"({m['rounds_to_first_retirement']} rounds).",
+            ]
     return "\n".join(lines)
 
 

@@ -79,7 +79,9 @@ class SlotServer(SlotProgram):
     def __init__(self, cfg: ArchConfig, params, capacity: int = 8,
                  max_len: int = 256, greedy: bool = True,
                  scheduler="fifo", result_cache: Optional[int] = None,
-                 preemptive: bool = False, preempt_margin: float = 0.0):
+                 preemptive: bool = False, preempt_margin: float = 0.0,
+                 journal=None, snapshot_every: int = 0, straggler=None,
+                 max_retries: int = 2):
         self.cfg = cfg
         self.params = params
         self.C = capacity
@@ -88,7 +90,9 @@ class SlotServer(SlotProgram):
         self.runtime = SlotRuntime(
             self, capacity, scheduler=scheduler, stats=ServeStats(),
             cache_size=result_cache, preemptive=preemptive,
-            preempt_margin=preempt_margin,
+            preempt_margin=preempt_margin, journal=journal,
+            snapshot_every=snapshot_every, straggler=straggler,
+            max_retries=max_retries,
         )
         self._slot_req: dict[int, Request] = {}
         self._pos = np.zeros(capacity, np.int32)  # next position to write

@@ -7,19 +7,24 @@ crash mid-save never corrupts the previous checkpoint.  Restore picks the
 newest manifest that verifies; because arrays are logical, a job restarted
 on a *different mesh shape* (elastic scaling) reshards transparently when
 the arrays are device_put with the new sharding.
+
+The atomic-write/verify protocol itself lives in ``core/store.py``
+(``commit_dir``/``write_manifest``/``verify_manifest``) — one durable
+format shared by training checkpoints and the engine's graph/index store
+(DESIGN.md §10).
 """
 from __future__ import annotations
 
-import hashlib
-import json
 import os
 import shutil
 import tempfile
-import time
 from typing import Any, Optional
 
 import jax
 import numpy as np
+
+from repro.core.store import (
+    commit_dir, sha256_file, verify_manifest, write_manifest)
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -47,45 +52,21 @@ def _unflatten_into(tree_like, flat: dict[str, np.ndarray]):
 def save(ckpt_dir: str, step: int, state: dict[str, Any]) -> str:
     os.makedirs(ckpt_dir, exist_ok=True)
     tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=f".tmp_step{step}_")
-    manifest = {"step": step, "time": time.time(), "files": {}, "complete": False}
     try:
+        files = {}
         for name, tree in state.items():
-            flat = _flatten(tree)
-            fpath = os.path.join(tmp, f"{name}.npz")
-            np.savez(fpath, **flat)
-            with open(fpath, "rb") as f:
-                manifest["files"][name] = hashlib.sha256(f.read()).hexdigest()
-        manifest["complete"] = True
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
-            f.flush()
-            os.fsync(f.fileno())
-        final = os.path.join(ckpt_dir, f"step_{step:08d}")
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.rename(tmp, final)
-        return final
+            fname = f"{name}.npz"
+            np.savez(os.path.join(tmp, fname), **_flatten(tree))
+            files[fname] = sha256_file(os.path.join(tmp, fname))
+        write_manifest(tmp, {"step": step, "files": files})
+        return commit_dir(tmp, os.path.join(ckpt_dir, f"step_{step:08d}"))
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
 
 
 def _verify(path: str) -> Optional[dict]:
-    mpath = os.path.join(path, "manifest.json")
-    if not os.path.exists(mpath):
-        return None
-    try:
-        with open(mpath) as f:
-            m = json.load(f)
-        if not m.get("complete"):
-            return None
-        for name, digest in m["files"].items():
-            with open(os.path.join(path, f"{name}.npz"), "rb") as f:
-                if hashlib.sha256(f.read()).hexdigest() != digest:
-                    return None
-        return m
-    except Exception:
-        return None
+    return verify_manifest(path)
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:

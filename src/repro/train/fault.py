@@ -1,18 +1,27 @@
 """Fault tolerance & straggler mitigation (simulated on one host).
 
-* ``FailureInjector`` raises at a chosen step, standing in for a device /
-  host loss.
+* ``FailureInjector`` raises at a chosen step (standing in for a device /
+  host loss); for the serving runtime (DESIGN.md §10) it can also
+  SIGKILL the process at a round boundary (the crash the journal +
+  supervisor recover from) and poison a live query's slot state with
+  NaN/Inf (the corruption the runtime quarantines as ``POISONED``).
 * ``run_with_restarts`` wraps a training loop: on failure it restores the
   latest verified checkpoint and replays from there.  With the
   deterministic data stream (data.py) the recovered run is bit-identical
-  to an uninterrupted one — asserted in tests.
-* ``StragglerMonitor`` keeps an EMA of step times and flags outliers; at
-  scale the runner uses it to trigger data-reshard hints (LM) or vertex
-  repartitioning (graph engine).  The detection logic is what's testable
-  here; the actuation on a real pod is a resharding call.
+  to an uninterrupted one — asserted in tests.  Its serving analogue is
+  ``launch/supervise.py::run_with_recovery`` (journal replay instead of
+  checkpoint restore).
+* ``StragglerMonitor`` keeps an EMA of step times and flags outliers; the
+  ``SlotRuntime(straggler=...)`` wiring feeds it per-round wall time
+  (``SlotStats.straggler_rounds``); at scale the runner uses it to
+  trigger data-reshard hints (LM) or vertex repartitioning (graph
+  engine).  The detection logic is what's testable here; the actuation on
+  a real pod is a resharding call.
 """
 from __future__ import annotations
 
+import os
+import signal
 import time
 from typing import Callable, Optional
 
@@ -22,14 +31,42 @@ class SimulatedFailure(RuntimeError):
 
 
 class FailureInjector:
-    def __init__(self, fail_at_steps: set[int]):
-        self.fail_at = set(fail_at_steps)
-        self.fired: set[int] = set()
+    """Deterministic fault injection, three modes (composable):
 
-    def check(self, step: int):
+    ``fail_at_steps``  raise ``SimulatedFailure`` once per listed step.
+    ``kill_at_steps``  SIGKILL this process at the listed step — nothing
+                       downstream runs, exactly like a real crash; only a
+                       supervisor in a PARENT process can recover.
+    ``poison_qids``    with ``check(step, engine=...)``: while any listed
+                       query is live, overwrite its slot's float state with
+                       NaN via ``engine.poison_slot`` — persistent
+                       corruption, re-applied every check, so retries keep
+                       failing and the query must end ``POISONED``.
+
+    ``check(step)`` keeps the original positional signature — training
+    callers are untouched.
+    """
+
+    def __init__(self, fail_at_steps: set[int] = (), *,
+                 kill_at_steps: set[int] = (), poison_qids: set[int] = ()):
+        self.fail_at = set(fail_at_steps)
+        self.kill_at = set(kill_at_steps)
+        self.poison_qids = set(poison_qids)
+        self.fired: set[int] = set()
+        self.poison_events: list[tuple[int, int]] = []  # (step, qid)
+
+    def check(self, step: int, engine=None):
+        if engine is not None and self.poison_qids:
+            for qid in sorted(self.poison_qids):
+                slot = engine.runtime.slot_of(qid)
+                if slot is not None:
+                    engine.poison_slot(slot)
+                    self.poison_events.append((step, qid))
         if step in self.fail_at and step not in self.fired:
             self.fired.add(step)
             raise SimulatedFailure(f"injected failure at step {step}")
+        if step in self.kill_at:
+            os.kill(os.getpid(), signal.SIGKILL)
 
 
 class StragglerMonitor:

@@ -1,0 +1,438 @@
+"""Differential crash-recovery harness (DESIGN.md §10).
+
+The recovery invariant: a serving run killed at ANY round boundary and
+recovered from its journal (retired queries replayed, in-flight queries
+resumed from the latest snapshot or re-run) must be observationally
+equivalent to an uninterrupted run — identical {qid -> result}, identical
+terminal statuses (DONE/TIMEOUT), identical cumulative superstep counts.
+Every cell of the (engine mode x scheduler x crash point) matrix is run
+twice — uninterrupted, then crashed at {the admission round, a seeded
+mid-drain round, the pre-final round} — and the fingerprints must match.
+
+Also here: journal unit tests (tagged-pytree roundtrip, torn-tail and
+checksum-corruption tolerance), poison quarantine (NaN slot state ->
+bounded retry -> POISONED, neighbors unharmed), drain-loop exception
+safety (host liveness mirror stays coherent, work is re-queued), the
+straggler wiring, and a real-SIGKILL subprocess run of the supervisor CLI.
+"""
+import math
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps.ppsp import make_bfs_engine
+from repro.apps.terrain import make_terrain_engine
+from repro.core.graph import Graph, grid_terrain, random_graph
+from repro.core.runtime import (
+    DONE, POISONED, TIMEOUT, QueryJournal, result_hash)
+from repro.launch.supervise import fold_journal, recover, run_with_recovery
+from repro.train.fault import FailureInjector, SimulatedFailure, StragglerMonitor
+
+MODES = [("fused", 1), ("fused", 4), ("legacy", 1)]
+SCHEDULERS = ["fifo", "sjf"]
+
+
+@pytest.fixture(scope="module")
+def matrix_graph():
+    """Random core + a path tail: heterogeneous short queries plus genuinely
+    heavy ones, so crashes land while slots are mid-flight (see
+    test_preemption.py)."""
+    g = random_graph(48, 3.0, seed=1, directed=True)
+    src = np.concatenate([np.asarray(g.src), np.arange(48, 59)])
+    dst = np.concatenate([np.asarray(g.dst), np.arange(49, 60)])
+    return Graph.from_edges(src.astype(np.int32), dst.astype(np.int32), 60)
+
+
+def _submits(n=6, seed=3):
+    rng = np.random.default_rng(seed)
+    pairs = rng.integers(0, 48, (n, 2))
+    subs = []
+    for i, (a, b) in enumerate(pairs):
+        kw = dict(priority=int(rng.integers(0, 3)))
+        if i % 3 == 1:
+            kw["budget"] = 2  # TIMEOUT eviction must survive recovery too
+        elif i % 3 == 2:
+            kw["budget"] = 64
+        subs.append((np.asarray([int(a), int(b)], np.int32), kw))
+    # heavy tail queries: many rounds in flight -> crashes hit live slots
+    subs.append((np.asarray([48, 59], np.int32), dict(budget=4)))
+    subs.append((np.asarray([48, 57], np.int32), dict(budget=64)))
+    return subs
+
+
+def _fingerprint(eng):
+    res = {
+        q: {k: np.asarray(v).tolist() for k, v in r.items()}
+        for q, r in eng.runtime.results.items()
+    }
+    return res, dict(eng.runtime.status), dict(eng.runtime.steps)
+
+
+# ------------------------------------------------------------ journal unit
+def test_journal_roundtrip(tmp_path):
+    p = str(tmp_path / "j.wal")
+    j = QueryJournal(p)
+    q = np.asarray([1, 2], np.int32)
+    j.submit(0, q, priority=1, deadline=math.inf, budget=4, seq=0)
+    res = {"dist": jnp.asarray(5, jnp.int32), "nested": [1.5, "x", None]}
+    j.retire(0, DONE, 3, res)
+    j.close()
+    recs = QueryJournal.replay(p)
+    assert [r["type"] for r in recs] == ["submit", "retire"]
+    s, r = recs
+    assert s["qid"] == 0 and s["priority"] == 1 and s["budget"] == 4
+    assert s["deadline"] == math.inf  # None on disk, inf in memory
+    assert np.array_equal(s["query"], q) and s["query"].dtype == np.int32
+    assert int(np.asarray(r["result"]["dist"])) == 5
+    assert r["result"]["nested"] == [1.5, "x", None]
+    assert r["result_hash"] == result_hash(res)
+    assert r["status"] == DONE and r["steps"] == 3
+
+
+def test_journal_torn_tail_and_corruption(tmp_path):
+    p = str(tmp_path / "j.wal")
+    j = QueryJournal(p)
+    for i in range(3):
+        j.submit(i, np.asarray([i], np.int32), priority=0,
+                 deadline=math.inf, budget=0, seq=i)
+    j.close()
+    # torn tail (crash mid-append): the complete prefix still replays
+    with open(p, "ab") as f:
+        f.write(b"deadbeef {\"type\": \"submit\", \"qid\"")
+    assert [r["qid"] for r in QueryJournal.replay(p)] == [0, 1, 2]
+    # checksum corruption mid-file: replay stops BEFORE the corrupt line
+    lines = open(p, "rb").read().splitlines(keepends=True)
+    assert b'"qid":1' in lines[1]
+    lines[1] = lines[1].replace(b'"qid":1', b'"qid":9')
+    with open(p, "wb") as f:
+        f.writelines(lines)
+    assert [r["qid"] for r in QueryJournal.replay(p)] == [0]
+    # a journal that never existed is an empty history, not an error
+    assert QueryJournal.replay(str(tmp_path / "nope.wal")) == []
+
+
+def test_fold_journal_last_writer_wins():
+    recs = [
+        {"type": "submit", "qid": 0, "seq": 0},
+        {"type": "snapshot", "qid": 0, "seq": 0, "steps": 2},
+        {"type": "snapshot", "qid": 0, "seq": 0, "steps": 5},
+        {"type": "submit", "qid": 1, "seq": 1},
+        {"type": "retire", "qid": 1, "status": DONE, "steps": 1},
+    ]
+    st = fold_journal(recs)
+    assert st["snaps"][0]["steps"] == 5  # latest snapshot wins
+    assert 1 in st["done"] and 1 not in st["snaps"]
+    assert set(st["submits"]) == {0, 1}
+
+
+# ------------------------------------------- differential crash matrix
+@pytest.mark.parametrize("mode,spr", MODES,
+                         ids=[f"{m}-spr{k}" for m, k in MODES])
+def test_crash_recovery_parity_matrix(matrix_graph, tmp_path, mode, spr):
+    g = matrix_graph
+    subs = _submits()
+    for scheduler in SCHEDULERS:
+        def boot():
+            return make_bfs_engine(g, capacity=3, scheduler=scheduler,
+                                   legacy=(mode == "legacy"),
+                                   steps_per_round=spr)
+
+        base = str(tmp_path / f"{scheduler}_base.wal")
+        eng0, info0 = run_with_recovery(boot, base, subs, snapshot_every=2)
+        want = _fingerprint(eng0)
+        _, statuses, _ = want
+        assert TIMEOUT in statuses.values() and DONE in statuses.values()
+        rounds = eng0.runtime.stats.rounds
+        crash_at = sorted({1, max(2, rounds // 2), max(1, rounds - 1)})
+        for r in crash_at:
+            inj = FailureInjector(fail_at_steps={r})
+            jp = str(tmp_path / f"{scheduler}_crash{r}.wal")
+            eng, info = run_with_recovery(boot, jp, subs, snapshot_every=2,
+                                          injector=inj)
+            assert _fingerprint(eng) == want, (mode, spr, scheduler, r)
+            assert info["restarts"] == 1
+            assert info["replayed_done"] + info["resumed_from_snapshot"] \
+                + info["resubmitted"] > 0
+
+
+def test_snapshot_resume_actually_fires(matrix_graph, tmp_path):
+    """With a per-round snapshot cadence, a mid-drain crash recovers at
+    least one query FROM its snapshot (not a from-scratch re-run), with
+    identical observable state."""
+    g = matrix_graph
+    subs = _submits()
+
+    def boot():
+        return make_bfs_engine(g, capacity=3, scheduler="fifo")
+
+    eng0, _ = run_with_recovery(boot, str(tmp_path / "b.wal"), subs)
+    want = _fingerprint(eng0)
+    inj = FailureInjector(fail_at_steps={3})
+    eng, info = run_with_recovery(boot, str(tmp_path / "c.wal"), subs,
+                                  snapshot_every=1, injector=inj)
+    assert info["resumed_from_snapshot"] > 0
+    assert eng.runtime.stats.replayed == info["replayed_done"]
+    assert _fingerprint(eng) == want
+
+
+def test_recovery_exhausts_restarts(matrix_graph, tmp_path):
+    g = matrix_graph
+
+    def boot():
+        return make_bfs_engine(g, capacity=2)
+
+    inj = FailureInjector(fail_at_steps={1, 2, 3})
+    with pytest.raises(SimulatedFailure):
+        run_with_recovery(boot, str(tmp_path / "j.wal"), _submits(),
+                          max_restarts=2, injector=inj)
+
+
+# --------------------------------------------------------- SPMD subprocess
+SPMD_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+    from repro.apps.ppsp import make_bfs_engine
+    from repro.core.graph import Graph, random_graph
+    from repro.launch.supervise import run_with_recovery
+    from repro.train.fault import FailureInjector
+
+    assert len(jax.devices()) == 8
+    mesh8 = Mesh(np.array(jax.devices()), ("w",))
+    gr = random_graph(48, 3.0, seed=1, directed=True)
+    src = np.concatenate([np.asarray(gr.src), np.arange(48, 63)])
+    dst = np.concatenate([np.asarray(gr.dst), np.arange(49, 64)])
+    g = Graph.from_edges(src.astype(np.int32), dst.astype(np.int32), 64)
+    rng = np.random.default_rng(3)
+    subs = []
+    for i, (a, b) in enumerate(rng.integers(0, 48, (6, 2))):
+        kw = {"budget": [0, 2, 64][i % 3]}
+        subs.append((np.asarray([int(a), int(b)], np.int32), kw))
+    subs.append((np.asarray([48, 63], np.int32), {"budget": 4}))
+    subs.append((np.asarray([48, 61], np.int32), {"budget": 64}))
+
+    def fp(eng):
+        res = {q: {k: np.asarray(v).tolist() for k, v in r.items()}
+               for q, r in eng.runtime.results.items()}
+        return res, dict(eng.runtime.status), dict(eng.runtime.steps)
+
+    root = os.environ["JDIR"]
+    for scheduler in ("fifo", "sjf"):
+        def boot():
+            return make_bfs_engine(g, capacity=3, scheduler=scheduler,
+                                   mesh=mesh8)
+
+        eng0, _ = run_with_recovery(boot, f"{root}/{scheduler}_b.wal", subs,
+                                    snapshot_every=2)
+        want = fp(eng0)
+        rounds = eng0.runtime.stats.rounds
+        for r in sorted({1, max(2, rounds // 2), max(1, rounds - 1)}):
+            inj = FailureInjector(fail_at_steps={r})
+            eng, info = run_with_recovery(
+                boot, f"{root}/{scheduler}_c{r}.wal", subs,
+                snapshot_every=2, injector=inj)
+            assert fp(eng) == want, (scheduler, r)
+            assert info["restarts"] == 1
+        print("spmd crash parity ok:", scheduler)
+    print("RECOVERY_SPMD_OK")
+    """
+)
+
+
+def _sub_env(extra=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep)
+    )
+    env["JAX_PLATFORMS"] = "cpu"
+    env.update(extra or {})
+    return env
+
+
+def test_spmd_crash_recovery_parity(tmp_path):
+    env = _sub_env({"JDIR": str(tmp_path)})
+    r = subprocess.run([sys.executable, "-c", SPMD_SCRIPT],
+                       capture_output=True, text=True, env=env, timeout=560)
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "RECOVERY_SPMD_OK" in r.stdout
+
+
+def test_supervisor_cli_sigkill_roundtrip(tmp_path):
+    """The real thing: the --crash-test parent SIGKILLs supervised child
+    processes mid-drain and asserts the recovered result map matches the
+    uninterrupted baseline (single device here; CI runs the 8-device
+    variant)."""
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.supervise", "--crash-test",
+         "--seeds", "1", "--kills", "2", "--queries", "6",
+         "--out", str(tmp_path / "crash")],
+        capture_output=True, text=True, env=_sub_env(), timeout=560,
+    )
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "recovered ≡ uninterrupted" in r.stdout
+    # the journal artifacts CI would upload exist
+    assert os.path.exists(tmp_path / "crash" / "seed_0" / "crashed.wal")
+
+
+# --------------------------------------------------------- poison quarantine
+@pytest.fixture(scope="module")
+def terrain():
+    return grid_terrain(8, 8, seed=1)
+
+
+def _terrain_subs(n=3, seed=5):
+    rng = np.random.default_rng(seed)
+    subs = [np.asarray([int(a), int(b)], np.int32)
+            for a, b in rng.integers(0, 64, (n, 2))]
+    # corner-to-corner: many rounds in flight, so injected poison always
+    # lands before the victim can retire
+    subs.append(np.asarray([0, 63], np.int32))
+    return subs
+
+
+def test_persistent_poison_quarantined(terrain):
+    """A query whose slot state keeps going non-finite retries max_retries
+    times (fresh re-admissions with backoff) and then retires POISONED —
+    with every other query's result identical to a clean run."""
+    g, coords = terrain
+    subs = _terrain_subs()
+    clean = make_terrain_engine(g, coords, capacity=2)
+    for q in subs:
+        clean.submit(q)
+    clean.run_until_drained()
+
+    eng = make_terrain_engine(g, coords, capacity=2, max_retries=2)
+    qids = [eng.submit(q) for q in subs]
+    victim = qids[-1]  # the corner-to-corner heavy
+    inj = FailureInjector(poison_qids={victim})
+    r = 0
+    while eng.runtime.pending() or eng.runtime.live.any():
+        eng.runtime.run_round()
+        inj.check(r, engine=eng)  # re-poisons while the victim is live
+        r += 1
+        assert r < 500
+    assert eng.runtime.status[victim] == POISONED
+    assert not np.isfinite(
+        np.asarray(eng.runtime.results[victim]["dist"])).all()
+    assert eng.runtime.stats.poison_retries == 2  # then the 3rd strike lands
+    assert eng.runtime.stats.poisoned == 1
+    assert len(inj.poison_events) >= 3  # re-applied every live round
+    for qid in qids:
+        if qid == victim:
+            continue
+        assert eng.runtime.status[qid] == DONE
+        assert np.asarray(eng.runtime.results[qid]["dist"]) == pytest.approx(
+            np.asarray(clean.runtime.results[qid]["dist"]))
+
+
+def test_transient_poison_retries_to_done(terrain):
+    """One-shot corruption: the retry (a fresh re-admission after backoff)
+    succeeds, the query ends DONE with the clean answer."""
+    g, coords = terrain
+    q = np.asarray([0, 63], np.int32)
+    clean = make_terrain_engine(g, coords, capacity=1)
+    want = clean.query(q)
+
+    eng = make_terrain_engine(g, coords, capacity=1)
+    qid = eng.submit(q)
+    eng.run_round()
+    assert eng.runtime.slot_of(qid) is not None
+    eng.poison_slot(eng.runtime.slot_of(qid))  # once, not re-applied
+    eng.run_until_drained()
+    assert eng.runtime.status[qid] == DONE
+    assert eng.runtime.stats.poison_retries == 1
+    assert eng.runtime.stats.poisoned == 0
+    assert np.asarray(eng.runtime.results[qid]["dist"]) == pytest.approx(
+        np.asarray(want["dist"]))
+
+
+def test_poison_refused_on_int_state(small_directed):
+    """BFS state is int32/bool: the finite INF sentinel cannot encode a
+    poison, so injection must refuse rather than silently no-op."""
+    eng = make_bfs_engine(small_directed, capacity=1)
+    eng.submit(np.asarray([0, 50], np.int32))
+    eng.run_round()
+    with pytest.raises(ValueError, match="no float leaves"):
+        eng.poison_slot(0)
+
+
+# --------------------------------------------------------- exception safety
+def test_exception_in_round_keeps_runtime_coherent(matrix_graph):
+    """An exception escaping slot_round must not desynchronize the host
+    liveness mirror: live slots are abandoned, their tickets re-queued, and
+    the drain completes with results identical to an undisturbed run."""
+    g = matrix_graph
+    subs = _submits()
+    clean = make_bfs_engine(g, capacity=3)
+    for q, kw in subs:
+        clean.submit(q, **kw)
+    clean.run_until_drained()
+    want = _fingerprint(clean)
+
+    eng = make_bfs_engine(g, capacity=3)
+    for q, kw in subs:
+        eng.submit(q, **kw)
+    eng.run_round()
+    eng.run_round()
+    inflight = int(eng.runtime.live.sum())
+    assert inflight > 0
+    pending_before = eng.runtime.pending()
+
+    def boom(admitted):
+        raise RuntimeError("injected mid-drain fault")
+
+    eng.slot_round = boom  # instance attribute shadows the bound method
+    with pytest.raises(RuntimeError, match="injected mid-drain"):
+        eng.runtime.run_round()
+    # coherent aftermath: nothing live, everything re-queued, failure counted
+    assert not eng.runtime.live.any()
+    assert eng.runtime._slot_ticket == {}
+    assert eng.runtime.pending() == pending_before + inflight
+    assert eng.runtime.stats.round_failures == 1
+    del eng.slot_round  # heal the program; the supervisor keeps draining
+    eng.run_until_drained()
+    assert _fingerprint(eng) == want
+
+
+def test_exception_in_collect_also_abandons(matrix_graph):
+    g = matrix_graph
+    eng = make_bfs_engine(g, capacity=2)
+    eng.submit(np.asarray([0, 5], np.int32))
+
+    def boom(slots):
+        raise RuntimeError("collect blew up")
+
+    eng.slot_collect = boom
+    with pytest.raises(RuntimeError, match="collect blew up"):
+        # drive until some slot finishes and collection is attempted
+        for _ in range(200):
+            eng.runtime.run_round()
+    assert not eng.runtime.live.any()
+    assert eng.runtime.stats.round_failures == 1
+    del eng.slot_collect
+    eng.run_until_drained()
+    assert eng.runtime.status[0] == DONE
+
+
+# ---------------------------------------------------------------- straggler
+def test_straggler_monitor_wiring(small_directed):
+    """SlotRuntime(straggler=...) feeds per-round wall time into the EMA
+    monitor and mirrors its flags into SlotStats.straggler_rounds."""
+    mon = StragglerMonitor(alpha=0.1, threshold=1e-6, warmup=1)
+    eng = make_bfs_engine(small_directed, capacity=2, straggler=mon)
+    for a, b in np.random.default_rng(0).integers(0, 60, (5, 2)):
+        eng.submit(np.asarray([int(a), int(b)], np.int32))
+    eng.run_until_drained()
+    # with a near-zero threshold every post-warmup round is an outlier
+    assert eng.runtime.stats.straggler_rounds > 0
+    assert eng.runtime.stats.straggler_rounds == len(mon.flags)
+    assert mon.count == eng.runtime.stats.rounds

@@ -1,0 +1,274 @@
+"""Durable store (core/store.py, DESIGN.md §10): atomic content-hashed
+entries, template-free restore, mesh-shape-agnostic sharding, corruption
+refusal, and the Hub² zero-rebuild boot path."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps.hub2 import (
+    build_hub_index, load_or_build_hub_index, make_hub2_engine)
+from repro.apps.ppsp import make_bfs_engine
+from repro.core.graph import Graph, random_graph
+from repro.core.store import (
+    Store, StoreError, _resolve_class, load_engine_store, save_engine_store,
+    verify_manifest)
+
+
+@pytest.fixture()
+def store(tmp_path):
+    return Store(str(tmp_path / "store"))
+
+
+def _graphs_equal(a: Graph, b: Graph) -> bool:
+    return a.content_hash() == b.content_hash() and all(
+        np.array_equal(np.asarray(getattr(a, f)), np.asarray(getattr(b, f)))
+        for f in ("in_deg", "out_deg", "csr_row", "csr_src", "csr_dst",
+                  "csr_w")
+    )
+
+
+# --------------------------------------------------------------- roundtrips
+def test_graph_roundtrip(store, small_directed):
+    store.put("graph", small_directed)
+    g = store.get("graph")
+    assert isinstance(g, Graph)
+    assert g.n == small_directed.n and g.n_real == small_directed.n_real
+    assert _graphs_equal(g, small_directed)
+
+
+def test_nested_pytree_roundtrip(store):
+    obj = {
+        "a": jnp.arange(5, dtype=jnp.int32),
+        "b": [1, "two", 3.5, None, True],
+        "c": (np.float32(2.5), {"deep": np.ones((2, 3), np.float32)}),
+    }
+    store.put("misc", obj, meta={"note": "x"})
+    got = store.get("misc")
+    assert np.array_equal(np.asarray(got["a"]), np.arange(5))
+    assert got["b"] == [1, "two", 3.5, None, True]
+    assert isinstance(got["c"], tuple)
+    assert np.asarray(got["c"][0]) == pytest.approx(2.5)
+    assert np.asarray(got["c"][1]["deep"]).dtype == np.float32
+    assert store.meta("misc") == {"note": "x"}
+    assert store.names() == ["misc"]
+
+
+def test_hub_index_roundtrip(store, small_directed):
+    idx = build_hub_index(small_directed, k=4)
+    store.put("index", idx)
+    got = store.get("index")
+    assert type(got).__name__ == "HubIndex"
+    assert np.array_equal(np.asarray(got.hub_ids), np.asarray(idx.hub_ids))
+    assert np.array_equal(np.asarray(got.hub_dist), np.asarray(idx.hub_dist))
+    assert np.array_equal(np.asarray(got.core), np.asarray(idx.core))
+    assert got.hub_dist.dtype == jnp.int32
+
+
+def test_bf16_disk_dtype_roundtrip(store):
+    x = jnp.asarray(np.arange(8), jnp.bfloat16)
+    store.put("bf16", x)
+    got = store.get("bf16")
+    assert got.dtype == jnp.bfloat16
+    assert np.array_equal(np.asarray(got, np.float32),
+                          np.asarray(x, np.float32))
+
+
+# ----------------------------------------------------------------- sharding
+def test_sharded_layout_and_logical_reassembly(store, small_directed):
+    g = small_directed.padded(4)
+    store.put("graph", g, shards=4, shard_dim=g.n)
+    d = os.path.join(store.root, "graph")
+    names = sorted(os.listdir(d))
+    assert "common.npz" in names
+    assert [n for n in names if n.startswith("shard_")] == [
+        f"shard_{i:03d}.npz" for i in range(4)
+    ]
+    # V-trailing leaves (in_deg, out_deg (n,)) live in the shards; edge
+    # arrays (E,) stay in common.npz unless E happens to equal n
+    with np.load(os.path.join(d, "shard_000.npz")) as z:
+        assert any(k.endswith("in_deg") for k in z.files)
+        for k in z.files:
+            assert z[k].shape[-1] == g.n // 4
+    assert _graphs_equal(store.get("graph"), g)
+
+
+def test_shard_divisibility_enforced(store, small_directed):
+    with pytest.raises(StoreError, match="not divisible"):
+        store.put("g", small_directed, shards=7, shard_dim=small_directed.n)
+    with pytest.raises(StoreError, match="needs shard_dim"):
+        store.put("g", small_directed, shards=2)
+
+
+# ----------------------------------------------------- corruption / atomicity
+def test_corrupt_file_refused(store, small_directed):
+    store.put("graph", small_directed)
+    target = os.path.join(store.root, "graph", "common.npz")
+    with open(target, "r+b") as f:
+        f.seek(100)
+        b = f.read(1)
+        f.seek(100)
+        f.write(bytes([b[0] ^ 0xFF]))
+    assert not store.exists("graph")
+    with pytest.raises(StoreError, match="hash mismatch|no valid entry"):
+        store.get("graph")
+
+
+def test_incomplete_manifest_refused(store, small_directed):
+    store.put("graph", small_directed)
+    mpath = os.path.join(store.root, "graph", "manifest.json")
+    with open(mpath) as f:
+        m = json.load(f)
+    m["complete"] = False
+    with open(mpath, "w") as f:
+        json.dump(m, f)
+    assert verify_manifest(os.path.join(store.root, "graph")) is None
+    assert not store.exists("graph")
+    assert store.names() == []
+
+
+def test_failed_put_preserves_old_entry(store, small_directed):
+    store.put("graph", small_directed)
+
+    class Unserializable:
+        pass
+
+    with pytest.raises(StoreError, match="cannot serialize"):
+        store.put("graph", {"bad": Unserializable()})
+    # the old complete entry survives; no tmp litter marked as an entry
+    assert store.exists("graph")
+    assert _graphs_equal(store.get("graph"), small_directed)
+    assert store.names() == ["graph"]
+
+
+def test_class_resolution_restricted():
+    with pytest.raises(StoreError, match="outside repro"):
+        _resolve_class("os.path:join")
+    with pytest.raises(StoreError, match="not a dataclass"):
+        _resolve_class("repro.core.store:Store")
+
+
+def test_bad_entry_names(store):
+    for bad in ("../x", ".hidden", "a/b", ""):
+        with pytest.raises(StoreError, match="bad entry name"):
+            store.put(bad, {"x": 1})
+
+
+# --------------------------------------------------------- engine boot state
+def test_save_load_engine_store_with_tables(store, small_directed):
+    g = small_directed
+    eng = make_bfs_engine(g, capacity=2, backend="blocks_ref", block=16)
+    eng.submit(jnp.asarray([0, 5], jnp.int32))
+    eng.run_until_drained()
+    tables = eng.export_tables()
+    assert tables, "tile backend should export per-semiring tables"
+    written = save_engine_store(store, g, index=build_hub_index(g, 3),
+                                aux_graphs={"rev": g.reverse()},
+                                tables=tables)
+    assert set(written) == {"graph", "index", "aux_graphs", "tables"}
+    state = load_engine_store(store)
+    assert _graphs_equal(state["graph"], g)
+    assert state["index"].k == 3
+    assert set(state["aux_graphs"]) == {"rev"}
+    for view, tabs in tables.items():
+        got = state["tables"][view]
+        for sr, tab in tabs.items():
+            assert np.array_equal(np.asarray(got[sr].tiles),
+                                  np.asarray(tab.tiles))
+            assert got[sr].block == tab.block
+
+
+def test_graph_hash_mismatch_refused(store, small_directed, small_undirected):
+    save_engine_store(store, small_directed,
+                      index=build_hub_index(small_directed, 3))
+    # overwrite the graph entry with a DIFFERENT graph: the stale index
+    # must be refused, never silently served
+    store.put("graph", small_undirected,
+              meta={"graph_hash": small_undirected.content_hash()})
+    with pytest.raises(StoreError, match="built against graph"):
+        load_engine_store(store)
+
+
+# ------------------------------------------------- Hub² zero-rebuild boot
+def test_load_or_build_hub_index_zero_rounds(store, small_directed):
+    g = small_directed
+    idx1, info1 = load_or_build_hub_index(store, g, k=4)
+    assert info1["built"] and info1["index_rounds"] > 0
+    # fresh Store handle over the same root: pure restore, ZERO
+    # index-construction super-rounds
+    store2 = Store(store.root)
+    idx2, info2 = load_or_build_hub_index(store2, g, k=4)
+    assert not info2["built"] and info2["index_rounds"] == 0
+    # the restored index answers identically to the built one
+    q = jnp.asarray([0, 17], jnp.int32)
+    want = make_hub2_engine(g, idx1).query(q)
+    got = make_hub2_engine(g, idx2).query(q)
+    assert int(got["dist"]) == int(want["dist"])
+    # a different graph invalidates the entry (hash-bound): rebuilds
+    g2 = random_graph(60, 3.0, seed=9, directed=True)
+    _, info3 = load_or_build_hub_index(Store(store.root), g2, k=4)
+    assert info3["built"] and info3["index_rounds"] > 0
+
+
+# -------------------------------------------------- elastic SPMD restore
+ELASTIC_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh
+    from repro.apps.ppsp import make_bfs_engine
+    from repro.core.graph import random_graph
+    from repro.core.store import Store, load_engine_store, save_engine_store
+
+    assert len(jax.devices()) == 8
+    root = os.environ["STORE_ROOT"]
+    g = random_graph(64, 3.0, seed=5, directed=True)  # 64 = 8-divisible
+
+    def mesh_of(k):
+        return Mesh(np.array(jax.devices()[:k]), ("w",)) if k > 1 else None
+
+    def run(graph, ndev):
+        eng = make_bfs_engine(graph, capacity=3, mesh=mesh_of(ndev))
+        rng = np.random.default_rng(7)
+        for a, b in rng.integers(0, graph.n_real, (6, 2)):
+            eng.submit(jnp.asarray([int(a), int(b)], jnp.int32))
+        res = eng.run_until_drained()
+        return {q: int(r["dist"]) for q, r in res.items()}
+
+    # save from an 8-way-sharded writer...
+    save_engine_store(Store(root), g, shards=8)
+    want = run(g, 8)
+    # ...restore on 4 devices and 1 device: logical arrays, identical maps
+    for ndev in (4, 1):
+        got = run(load_engine_store(Store(root))["graph"], ndev)
+        assert got == want, (ndev, got, want)
+        print("elastic restore ok on", ndev, "devices")
+    # and vice versa: a 1-shard store boots the 8-device engine
+    save_engine_store(Store(root + "_1"), g, shards=1)
+    got = run(load_engine_store(Store(root + "_1"))["graph"], 8)
+    assert got == want
+    print("ELASTIC_OK")
+    """
+)
+
+
+def test_elastic_restore_across_mesh_shapes(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep)
+    )
+    env["JAX_PLATFORMS"] = "cpu"
+    env["STORE_ROOT"] = str(tmp_path / "estore")
+    r = subprocess.run([sys.executable, "-c", ELASTIC_SCRIPT],
+                       capture_output=True, text=True, env=env, timeout=560)
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "ELASTIC_OK" in r.stdout
