@@ -277,10 +277,46 @@ def table12_keyword(quick=False):
         eng._results.clear()
 
 
+def _bench_meta() -> dict:
+    """Provenance block stamped into BENCH_quegel.json on every merge, so
+    committed rows across PRs say what host/tree/tunings produced them."""
+    import platform as _platform
+    import subprocess
+    from datetime import datetime, timezone
+
+    from repro.launch import env as _env
+
+    meta = {
+        "platform": _platform.platform(),
+        "python": _platform.python_version(),
+        "cpus": os.cpu_count() or 1,
+        "timestamp": datetime.now(timezone.utc).isoformat(
+            timespec="seconds"),
+        "env": _env.describe(),
+    }
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+        )
+        if sha.returncode == 0:
+            meta["git_sha"] = sha.stdout.strip()
+            dirty = subprocess.run(
+                ["git", "status", "--porcelain", "--untracked-files=no"],
+                capture_output=True, text=True, timeout=10,
+            )
+            if dirty.returncode == 0 and dirty.stdout.strip():
+                meta["git_sha"] += "+dirty"
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return meta
+
+
 def _merge_bench_json(update: dict, path: str = "BENCH_quegel.json"):
     """Update top-level keys of the committed bench JSON in place, so
     ``--only sparsity`` and ``--only hotpath`` each land without clobbering
-    the other table's numbers."""
+    the other table's numbers.  Every merge re-stamps the provenance
+    ``meta`` block (platform, cpus, git SHA, timestamp, active tunings)."""
     data = {}
     if os.path.exists(path):
         try:
@@ -289,6 +325,7 @@ def _merge_bench_json(update: dict, path: str = "BENCH_quegel.json"):
         except (OSError, json.JSONDecodeError):
             data = {}
     data.update(update)
+    data.setdefault("meta", {}).update(_bench_meta())
     with open(path, "w") as f:
         json.dump(data, f, indent=2)
     print(f"# wrote {path}")
@@ -721,6 +758,12 @@ def bench_serving(quick=False):
                     np.percentile(lat("heavy", done_round), 95)
                 ),
                 mean_occupancy=float(np.mean(st.slot_occupancy)),
+                # latency split (DESIGN.md §11): is slowness queueing or
+                # execution?  fifo shows the convoy as queue wait.
+                qwait_p50_s=st.queue_wait_percentile(50),
+                qwait_p95_s=st.queue_wait_percentile(95),
+                service_p50_s=st.service_percentile(50),
+                service_p95_s=st.service_percentile(95),
             ))
             maps.append({
                 idx_of[qid]: {k: np.asarray(v).tolist() for k, v in r.items()}
@@ -745,6 +788,8 @@ def bench_serving(quick=False):
         emit("serving", f"{name}_qps", cell["queries_per_sec"])
         emit("serving", f"{name}_light_p95_s", cell["light_p95_s"])
         emit("serving", f"{name}_mean_occupancy", cell["mean_occupancy"])
+        emit("serving", f"{name}_qwait_p95_s", cell["qwait_p95_s"])
+        emit("serving", f"{name}_service_p95_s", cell["service_p95_s"])
     fifo_p95 = out["schedulers"]["fifo"]["light_p95_s"]
     out["light_p95_speedup"] = {
         name: fifo_p95 / out["schedulers"][name]["light_p95_s"]
@@ -1211,8 +1256,240 @@ def bench_recovery(quick=False):
     RESULTS.setdefault("recovery", {})["json"] = out
 
 
+# ------------------------------------------------------------- loadgen
+def bench_loadgen(quick=False):
+    """Open-loop serving under sustained offered load (DESIGN.md §11).
+
+    Four sub-tables, merged into ``BENCH_quegel.json`` under ``loadgen``:
+
+    * ``curves`` — latency-throughput curves on a mixed light/heavy PPSP
+      workload: Poisson arrivals on a deterministic virtual clock (1 tick
+      = 1 super-round), swept over offered rate for scheduler ∈ {fifo,
+      sjf} x replicas ∈ {1, 2, 4}, plus deadline and preemptive sjf at
+      R=1.  Each cell: p50/p95/p99 latency (ticks), achieved-vs-offered
+      qps, delivered capacity (``busy_qps``), backlog high-water mark and
+      the wall-time queue-wait/service split; each curve carries its
+      saturation knee.  In-run asserts: every configuration keeps up
+      (busy_qps >= offered) at the lowest sweep point, and R=4 serves a
+      rate far beyond the R=1 knee.
+    * ``arrivals`` — poisson vs constant vs bursty MMPP at the same mean
+      rate (burstiness shows up as tail latency, not throughput).
+    * ``routing`` — hash-affine vs round-robin vs p2c on a Zipf-skewed
+      repeated-query mix over Hub^2 replicas booted from ONE durable
+      store read (zero per-replica index rebuilds), each replica with a
+      small per-replica LRU result cache.  Affinity keeps each LRU hot on
+      1/N of the key space; round-robin churns all of them.  In-run
+      asserts: affine hit rate strictly beats round-robin, and every
+      policy's merged result map is IDENTICAL to a single engine run.
+    * ``wall`` (full runs only) — one wall-clock-mode point, same
+      machinery against real time.
+    """
+    import shutil
+    import tempfile
+
+    import jax
+
+    from repro.apps.hub2 import build_hub_index, make_hub2_engine
+    from repro.apps.ppsp import make_bfs_engine
+    from repro.core.graph import barabasi_albert, grid_terrain
+    from repro.core.store import Store, save_engine_store
+    from repro.launch import env as envmod
+    from repro.launch.loadgen import (
+        make_arrivals, run_open_loop, saturation_knee, sweep_qps)
+    from repro.launch.router import ReplicaPool, boot_replicas_from_store
+
+    print(f"# env: {envmod.describe()}")
+    out: dict = {
+        "meta": {
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "quick": bool(quick),
+            "clock": "virtual (1 tick = 1 super-round)",
+        },
+        "curves": {},
+        "arrivals": {},
+        "routing": {},
+    }
+
+    # ---------------- latency-throughput curves --------------------------
+    rows, cols = (10, 12) if quick else (14, 16)
+    g, _ = grid_terrain(rows, cols, seed=51)
+    C = 4  # slots per replica
+    rng = np.random.default_rng(52)
+    n_q = 20 if quick else 64
+    budget_heavy = 4 * (rows + cols)
+    items = []
+    for i in range(n_q):
+        if i % 4 == 0:  # heavy: corner-to-corner, ~rows+cols supersteps
+            a = int(rng.integers(0, cols // 2))
+            b = g.n_real - 1 - int(rng.integers(0, cols // 2))
+            items.append((jnp.asarray([a, b], jnp.int32),
+                          dict(budget=budget_heavy, deadline=1e6)))
+        else:           # light: horizontal neighbors, 1-2 supersteps
+            v = int(rng.integers(0, g.n_real - 2))
+            v -= 1 if (v + 1) % cols == 0 else 0
+            items.append((jnp.asarray([v, v + 1], jnp.int32),
+                          dict(budget=16, deadline=1.0)))
+    rates = (0.25, 2.0) if quick else (0.25, 0.5, 1.0, 2.0, 4.0)
+    replica_counts = (1, 2) if quick else (1, 2, 4)
+    configs = [("fifo", False, r) for r in replica_counts]
+    configs += [("sjf", False, r) for r in replica_counts]
+    if not quick:
+        configs += [("deadline", False, 1), ("sjf", True, 1)]
+    out["meta"].update(capacity=C, n_queries=n_q, rates=list(rates),
+                       graph=f"grid {rows}x{cols}")
+    knees: dict = {}
+    for sched, preemptive, R in configs:
+        tag = f"{sched}{'_preemptive' if preemptive else ''}"
+        pool = ReplicaPool([
+            make_bfs_engine(g, capacity=C, scheduler=sched,
+                            preemptive=preemptive)
+            for _ in range(R)
+        ])
+        # warm every replica's round variants off-clock
+        for q, kw in items[:3]:
+            pool.submit(q, **kw)
+        pool.drain()
+        swept = sweep_qps(lambda: pool, items, rates, process="poisson",
+                          seed=53)
+        curve = swept["curve"]
+        for rate, cell in curve.items():
+            assert cell["statuses"].get("DONE", 0) == n_q, (tag, rate, cell)
+        low = min(curve)
+        assert curve[low]["busy_qps"] >= low, (
+            f"{tag} R={R} cannot keep up at the lowest offered rate: "
+            f"delivered {curve[low]['busy_qps']:.3f} < offered {low}"
+        )
+        out["curves"].setdefault(tag, {})[f"R{R}"] = swept
+        knees[(tag, R)] = swept["knee"]
+        emit("loadgen", f"{tag}_R{R}_knee_qps", swept["knee"])
+        hi = max(curve)
+        emit("loadgen", f"{tag}_R{R}_p99_at_q{hi}", curve[hi]["lat_p99"])
+    if not quick:
+        # replicas buy throughput: R=4 keeps up at a rate R=1 has dropped
+        for sched in ("fifo", "sjf"):
+            assert knees[(sched, 4)] >= knees[(sched, 1)], (sched, knees)
+
+    # ---------------- arrival-process A/B at one rate --------------------
+    rate = 1.0
+    n_a = 16 if quick else 48
+    arr_items = items[:n_a] if len(items) >= n_a else items * 3
+    arr_items = arr_items[:n_a]
+    for process in ("poisson", "constant", "mmpp"):
+        pool = ReplicaPool([
+            make_bfs_engine(g, capacity=C, scheduler="sjf")
+            for _ in range(2)
+        ])
+        for q, kw in arr_items[:3]:
+            pool.submit(q, **kw)
+        pool.drain()
+        for rt in (rep.runtime for rep in pool.replicas):
+            rt.stats = type(rt.stats)()
+        arr = make_arrivals(process, rate, n_a, seed=54)
+        res = run_open_loop(pool, arr_items, arr, offered_qps=rate)
+        out["arrivals"][process] = res.summary()
+        emit("loadgen", f"arr_{process}_p99", res.latency_percentile(99))
+
+    # ---------------- routing A/B: affine vs rr vs p2c on Zipf -----------
+    gb = barabasi_albert(200 if quick else 600, 3, seed=55)
+    idx = build_hub_index(gb, k=16, capacity=8)
+    R = 2 if quick else 4
+    cache_size = 8 if quick else 16
+    n_keys = 12 if quick else 48   # distinct queries; K/R fits one LRU,
+    n_zipf = 60 if quick else 240  # the full key set does not
+    tmp = tempfile.mkdtemp(prefix="bench_loadgen_")
+    try:
+        store = Store(os.path.join(tmp, "store"))
+        save_engine_store(store, gb, index=idx)
+        rngz = np.random.default_rng(56)
+        keys = [(int(a), int(b))
+                for a, b in rngz.integers(0, gb.n_real, (n_keys, 2))]
+        p = 1.0 / np.arange(1, n_keys + 1) ** 1.1
+        p /= p.sum()
+        picks = rngz.choice(n_keys, n_zipf, p=p)
+        zipf_items = [jnp.asarray(keys[k], jnp.int32) for k in picks]
+        out["routing"]["meta"] = dict(
+            replicas=R, cache_size=cache_size, n_keys=n_keys,
+            n_queries=n_zipf, zipf_s=1.1, store_loads=1,
+        )
+
+        def boot_pool(policy):
+            t0 = time.perf_counter()
+            reps = boot_replicas_from_store(
+                store,
+                lambda i, parts: make_hub2_engine(
+                    parts["graph"], parts["index"], capacity=2,
+                    result_cache=cache_size,
+                ),
+                R,
+            )
+            boot_s = time.perf_counter() - t0
+            # zero per-replica index rebuild: nobody ran a single round
+            assert all(r.runtime.stats.rounds == 0 for r in reps)
+            return ReplicaPool(reps, policy=policy), boot_s
+
+        # single-engine baseline for the identity assert
+        single = make_hub2_engine(gb, idx, capacity=2,
+                                  result_cache=cache_size)
+        for q in zipf_items:
+            single.submit(q)
+        single.run_until_drained()
+        norm = lambda res: {
+            qid: {k: np.asarray(v).tolist() for k, v in sorted(r.items())}
+            for qid, r in res.items()
+        }
+        base_map = norm(single.runtime.results)
+
+        hits = {}
+        for policy in ("affine", "rr", "p2c"):
+            pool, boot_s = boot_pool(policy)
+            arr = make_arrivals("constant", 2.0, n_zipf, seed=57)
+            res = run_open_loop(pool, zipf_items, arr, offered_qps=2.0)
+            assert norm(pool.results) == base_map, (
+                f"router policy {policy!r} changed the merged result map"
+            )
+            cell = res.summary()
+            cell.update(pool.stats_summary())
+            cell["boot_s"] = boot_s
+            cell["hit_rate"] = pool.cache_hits / n_zipf
+            cell["results_match_single"] = True
+            out["routing"][policy] = cell
+            hits[policy] = pool.cache_hits
+            emit("loadgen", f"routing_{policy}_hit_rate", cell["hit_rate"])
+            emit("loadgen", f"routing_{policy}_balance", cell["balance"])
+        assert hits["affine"] > hits["rr"], (
+            "hash-affine routing must beat round-robin on cache hits "
+            f"(affine={hits['affine']}, rr={hits['rr']})"
+        )
+        out["routing"]["affine_vs_rr_hit_ratio"] = (
+            hits["affine"] / max(hits["rr"], 1)
+        )
+        emit("loadgen", "routing_affine_vs_rr_hit_ratio",
+             out["routing"]["affine_vs_rr_hit_ratio"])
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    # ---------------- one wall-clock-mode point (full runs) --------------
+    if not quick:
+        eng = make_bfs_engine(g, capacity=C, scheduler="sjf")
+        for q, kw in items[:3]:
+            eng.submit(q, **kw)
+        eng.run_until_drained()
+        eng.stats = type(eng.stats)()
+        wall_items = items[:24]
+        arr = make_arrivals("poisson", 20.0, len(wall_items), seed=58)
+        res = run_open_loop(eng, wall_items, arr, clock="wall",
+                            offered_qps=20.0)
+        out["wall"] = res.summary()
+        emit("loadgen", "wall_p95_s", res.latency_percentile(95))
+
+    _merge_bench_json({"loadgen": out})
+    RESULTS.setdefault("loadgen", {})["json"] = out
+
+
 TABLES = {
     "hotpath": bench_hotpath,
+    "loadgen": bench_loadgen,
     "recovery": bench_recovery,
     "sparsity": bench_sparsity,
     "serving": bench_serving,
@@ -1241,6 +1518,9 @@ def main() -> int:
         "ab.speedup_super_rounds_per_sec >= X (run after --only hotpath)",
     )
     args = ap.parse_args()
+    from repro.launch import env as _env
+
+    print(f"# env: {_env.describe()}")
     names = [args.only] if args.only else list(TABLES)
     for name in names:
         print(f"# --- {name} ---")

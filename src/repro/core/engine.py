@@ -987,6 +987,26 @@ class QuegelEngine(SlotProgram):
         """Batch-querying mode (paper scenario ii)."""
         return self.runtime.run_until_drained(max_rounds)
 
+    def pump(self) -> list[tuple[int, Any, str]]:
+        """Open-loop mode (DESIGN.md §11): advance at most one round and
+        return ALL terminal transitions ``(qid, result, status)`` since the
+        last pump — including cache hits, rejections and TIMEOUTs, unlike
+        ``run_round`` which reports DONE only.  Never blocks; submit
+        between pumps to interleave arrivals with execution."""
+        return self.runtime.pump()
+
+    def poll(self, qid: int) -> Optional[tuple[str, Any]]:
+        """``(status, result)`` once ``qid`` is terminal, else None."""
+        return self.runtime.poll(qid)
+
+    def pending(self) -> int:
+        """Queued-but-unadmitted queries (loadgen backlog signal)."""
+        return self.runtime.pending()
+
+    def inflight(self) -> int:
+        """Queries holding slot state right now (live + suspended)."""
+        return self.runtime.inflight()
+
     def query(self, q, max_rounds: int = 100_000, **submit_kw):
         """Interactive mode (paper scenario i): submit and wait.
 

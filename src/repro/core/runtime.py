@@ -55,6 +55,12 @@ the program; the runtime adds policy on top:
   detected at extraction is quarantined: fresh re-admission with
   exponential backoff up to ``max_retries``, then a terminal ``POISONED``
   status — corruption never spreads to neighbors or kills the drain loop.
+* **Open-loop serving** (DESIGN.md §11): ``pump()`` is the non-blocking
+  face of the round loop — flush off-round completions, advance at most
+  one round, return what retired — so a load generator
+  (launch/loadgen.py) or replica router (launch/router.py) can interleave
+  arrivals with execution instead of draining batches; per-query latency
+  is split into queue-wait (submit -> first admission) and service time.
 """
 from __future__ import annotations
 
@@ -119,6 +125,15 @@ class SlotStats:
     round_times: list = dataclasses.field(default_factory=list)
     # per-query submit->result latency, appended at completion (bench: p50/p95)
     query_latencies: list = dataclasses.field(default_factory=list)
+    # the same latency split at the FIRST admission boundary (DESIGN.md §11):
+    # queue_wait = submit -> first slot admission, service = admission ->
+    # retirement.  Appended in lockstep with query_latencies (DONE only), so
+    # queue_waits[i] + service_times[i] == query_latencies[i] exactly — the
+    # split says whether slowness is queueing or execution.  A cache hit is
+    # (0.0, elapsed); a resumed query keeps its first admit_t, so suspension
+    # time is charged to service, not queueing.
+    queue_waits: list = dataclasses.field(default_factory=list)
+    service_times: list = dataclasses.field(default_factory=list)
     # live slots per executed round (utilization; bench: mean occupancy)
     slot_occupancy: list = dataclasses.field(default_factory=list)
 
@@ -126,10 +141,20 @@ class SlotStats:
     def wall_time(self) -> float:
         return float(sum(self.round_times))
 
-    def latency_percentile(self, q: float) -> float:
-        if not self.query_latencies:
+    @staticmethod
+    def _pct(xs: list, q: float) -> float:
+        if not xs:
             return float("nan")
-        return float(np.percentile(self.query_latencies, q))
+        return float(np.percentile(xs, q))
+
+    def latency_percentile(self, q: float) -> float:
+        return self._pct(self.query_latencies, q)
+
+    def queue_wait_percentile(self, q: float) -> float:
+        return self._pct(self.queue_waits, q)
+
+    def service_percentile(self, q: float) -> float:
+        return self._pct(self.service_times, q)
 
 
 # ----------------------------------------------------------------- scheduler
@@ -144,6 +169,10 @@ class Ticket:
     budget: int = 0           # declared superstep budget; 0 = unlimited.
     # Doubles as the sjf job-size estimate and the TIMEOUT eviction bound.
     submit_t: float = 0.0
+    # wall time of the FIRST slot admission (0.0 = never admitted yet);
+    # preserved across suspend/resume so queue_wait measures submission ->
+    # first admission once, however often the query is preempted.
+    admit_t: float = 0.0
     seq: int = 0              # submission order; ties break FIFO
     # supersteps already charged to this query (nonzero only for a resume
     # ticket): sjf ranks by REMAINING work, and the TIMEOUT bound keeps
@@ -628,6 +657,10 @@ class SlotRuntime:
         # tickets left still makes progress.
         self._retry_q: list[tuple[int, Ticket]] = []
         self._ticks = 0
+        # completions that retire OFF the round path (cache-hit submits,
+        # validation rejections) — queued here so ``pump()`` reports every
+        # terminal transition exactly once (DESIGN.md §11).
+        self._pump_buf: list[tuple[int, Any, str]] = []
 
     # ------------------------------------------------------------- client
     def submit(
@@ -656,7 +689,11 @@ class SlotRuntime:
                 self.steps[qid] = 0  # served host-side: no supersteps
                 self.stats.cache_hits += 1
                 self.stats.queries_done += 1
-                self.stats.query_latencies.append(time.perf_counter() - t)
+                elapsed = time.perf_counter() - t
+                self.stats.query_latencies.append(elapsed)
+                self.stats.queue_waits.append(0.0)  # never queued
+                self.stats.service_times.append(elapsed)
+                self._pump_buf.append((qid, hit, DONE))
                 if self.journal is not None:
                     # WAL the full lifecycle even for a cache hit, so replay
                     # needs no cache-state reconstruction
@@ -757,8 +794,11 @@ class SlotRuntime:
                     self._qid_key.pop(tk.qid, None)  # never enters cache
                     if self.journal is not None:
                         self.journal.retire(tk.qid, status, 0, res)
+                    self._pump_buf.append((tk.qid, res, status))
                     continue
             slot = free.pop()
+            if tk.admit_t == 0.0:
+                tk = dataclasses.replace(tk, admit_t=time.perf_counter())
             if tk.resume is None:
                 admitted[slot] = tk.query
             else:
@@ -933,6 +973,12 @@ class SlotRuntime:
             if status == DONE:
                 self.stats.queries_done += 1
                 self.stats.query_latencies.append(t_done - tk.submit_t)
+                # split on the same timestamps, so wait + service == latency
+                admit = tk.admit_t if tk.admit_t > 0.0 else tk.submit_t
+                self.stats.queue_waits.append(max(0.0, admit - tk.submit_t))
+                self.stats.service_times.append(
+                    (t_done - tk.submit_t) - max(0.0, admit - tk.submit_t)
+                )
                 key = self._qid_key.pop(tk.qid, None)
                 if self.cache is not None and key is not None:
                     self.cache.put(key, res)
@@ -954,6 +1000,38 @@ class SlotRuntime:
                 and self.stats.rounds % self.snapshot_every == 0):
             self.snapshot()
         return completed
+
+    # ------------------------------------------------------------ open loop
+    def pump(self) -> list[tuple[int, Any, str]]:
+        """Non-blocking open-loop step (DESIGN.md §11): flush completions
+        that retired off the round path (cache hits, rejections), then —
+        only if there is admissible or live work — advance exactly one
+        round.  Returns every ``(qid, result, status)`` that reached a
+        terminal state since the last ``pump()``/``run_round()``, possibly
+        empty; never blocks waiting for arrivals.  ``submit()`` between
+        pumps is the intended arrival path: new tickets are admitted at the
+        next round boundary, interleaving with in-flight queries instead of
+        waiting for a drain.  Invariant: pumping until idle yields the same
+        results/status/steps maps as ``run_until_drained`` for the same
+        submits, and each qid is reported exactly once."""
+        out: list[tuple[int, Any, str]] = []
+        if self._pump_buf:
+            out.extend(self._pump_buf)
+            self._pump_buf.clear()
+        if self.pending() or self.live.any():
+            out.extend(self.run_round() or [])
+            if self._pump_buf:  # rejections during THIS round's admission
+                out.extend(self._pump_buf)
+                self._pump_buf.clear()
+        return out
+
+    def poll(self, qid: int) -> Optional[tuple[str, Any]]:
+        """``(status, result)`` once ``qid`` is terminal, else None.  Pure
+        inspection — never advances a round."""
+        st = self.status.get(qid)
+        if st is None:
+            return None
+        return st, self.results.get(qid)
 
     # ------------------------------------------------------------ recovery
     def restore_retired(self, qid: int, status: str, result, steps: int,

@@ -95,7 +95,23 @@ def bench_tables(path: str) -> str:
     """Markdown tables from the hot-path benchmark JSON (DESIGN.md §7)."""
     with open(path) as f:
         bench = json.load(f)
-    lines = [
+    meta = bench.get("meta", {})
+    lines = []
+    prov = []
+    if meta.get("platform"):
+        prov.append(meta["platform"])
+    if meta.get("cpus"):
+        prov.append(f"{meta['cpus']} cpu(s)")
+    if meta.get("git_sha"):
+        prov.append(f"git {meta['git_sha'][:12]}")
+    if meta.get("timestamp"):
+        prov.append(meta["timestamp"])
+    if prov:
+        lines += [f"_{' · '.join(prov)}_"]
+        if meta.get("env"):
+            lines += [f"_env: {meta['env']}_"]
+        lines += [""]
+    lines += [
         f"## Engine hot path ({bench['meta']['backend']}, "
         f"jax {bench['meta']['jax']}"
         + (", quick)" if bench["meta"].get("quick") else ")"),
@@ -170,15 +186,19 @@ def bench_tables(path: str) -> str:
             + (", quick)" if meta.get("quick") else ")"),
             "",
             "| scheduler | wall | q/s | light p50 | light p95 | heavy p95 | "
-            "light p95 (rounds) | mean occ |",
-            "|---|---|---|---|---|---|---|---|",
+            "light p95 (rounds) | q-wait p95 | service p95 | mean occ |",
+            "|---|---|---|---|---|---|---|---|---|---|",
         ]
         for name, m in sv.get("schedulers", {}).items():
+            qw = m.get("qwait_p95_s")
+            svc = m.get("service_p95_s")
             lines.append(
                 f"| {name} | {fmt_s(m['wall_s'])} | "
                 f"{m['queries_per_sec']:.0f} | {fmt_s(m['light_p50_s'])} | "
                 f"{fmt_s(m['light_p95_s'])} | {fmt_s(m['heavy_p95_s'])} | "
                 f"{m.get('light_p95_rounds', float('nan')):.0f} | "
+                f"{fmt_s(qw) if qw is not None else '—'} | "
+                f"{fmt_s(svc) if svc is not None else '—'} | "
                 f"{m['mean_occupancy']:.2f} |"
             )
         sp_ = sv.get("light_p95_speedup", {})
@@ -324,6 +344,89 @@ def bench_tables(path: str) -> str:
                 f"{m['resubmitted']} re-run), first retirement "
                 f"{fmt_s(m['mttr_s'])} after boot "
                 f"({m['rounds_to_first_retirement']} rounds).",
+            ]
+    lg = bench.get("loadgen")
+    if lg:
+        lmeta = lg.get("meta", {})
+        lines += [
+            "",
+            f"## Open-loop serving (DESIGN.md §11): sustained offered load "
+            f"({lmeta.get('graph', '?')}, C={lmeta.get('capacity', '?')} "
+            f"per replica"
+            + (", quick)" if lmeta.get("quick") else ")"),
+            "",
+            "Virtual clock: 1 tick = 1 super-round; latencies in ticks "
+            "(deterministic). `delivered` is completions per busy tick — "
+            "\"keeps up\" means delivered ≥ offered, asserted in-run at "
+            "the lowest sweep point.",
+            "",
+            "| scheduler | R | offered | achieved | delivered | p50 | p95 "
+            "| p99 | max backlog | knee |",
+            "|---|---|---|---|---|---|---|---|---|---|",
+        ]
+        for sched, by_r in lg.get("curves", {}).items():
+            for rtag, swept in by_r.items():
+                curve = swept.get("curve", {})
+                for rate in sorted(curve, key=float):
+                    c = curve[rate]
+                    lines.append(
+                        f"| {sched} | {rtag.removeprefix('R')} | "
+                        f"{float(rate):g} | {c['achieved_qps']:.2f} | "
+                        f"{c['busy_qps']:.2f} | {c['lat_p50']:.0f} | "
+                        f"{c['lat_p95']:.0f} | {c['lat_p99']:.0f} | "
+                        f"{c['max_backlog']} | {swept.get('knee', 0):g} |"
+                    )
+        arr = lg.get("arrivals", {})
+        if arr:
+            lines += [
+                "",
+                "**Arrival processes** (same mean rate): "
+                + ", ".join(
+                    f"{p} p99 {c['lat_p99']:.0f} ticks"
+                    for p, c in arr.items()
+                )
+                + " — burstiness (MMPP) shows up as tail latency, not "
+                "throughput.",
+            ]
+        rt = lg.get("routing", {})
+        pols = [p for p in ("affine", "rr", "p2c") if p in rt]
+        if pols:
+            rmeta = rt.get("meta", {})
+            lines += [
+                "",
+                f"### Routing (replicas={rmeta.get('replicas', '?')}, "
+                f"LRU={rmeta.get('cache_size', '?')}/replica, "
+                f"{rmeta.get('n_keys', '?')} Zipf keys, one shared store "
+                "read)",
+                "",
+                "| policy | hit rate | balance | spills | boot | "
+                "= single engine |",
+                "|---|---|---|---|---|---|",
+            ]
+            for p in pols:
+                c = rt[p]
+                lines.append(
+                    f"| {p} | {c.get('hit_rate', 0):.2f} | "
+                    f"{c.get('balance', float('nan')):.2f} | "
+                    f"{c.get('spills', 0)} | "
+                    f"{fmt_s(c.get('boot_s', 0))} | "
+                    f"{'yes' if c.get('results_match_single') else 'NO'} |"
+                )
+            if "affine_vs_rr_hit_ratio" in rt:
+                lines += [
+                    "",
+                    f"**Hash-affine vs round-robin cache hits:** "
+                    f"{rt['affine_vs_rr_hit_ratio']:.2f}x (merged result "
+                    "maps asserted identical to a single engine for every "
+                    "policy, in-run).",
+                ]
+        w = lg.get("wall")
+        if w:
+            lines += [
+                "",
+                f"**Wall-clock mode** (offered {w['offered_qps']:g} q/s): "
+                f"achieved {w['achieved_qps']:.1f} q/s, p95 "
+                f"{fmt_s(w['lat_p95'])}.",
             ]
     return "\n".join(lines)
 

@@ -284,6 +284,14 @@ class SlotServer(SlotProgram):
     def run_until_drained(self, max_rounds: int = 100_000):
         return self.runtime.run_until_drained(max_rounds)
 
+    def pump(self):
+        """Open-loop mode (DESIGN.md §11): at most one decode round,
+        returning terminal ``(qid, result, status)`` transitions."""
+        return self.runtime.pump()
+
+    def poll(self, qid: int):
+        return self.runtime.poll(qid)
+
 
 def main():
     import argparse

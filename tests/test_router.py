@@ -1,0 +1,273 @@
+"""Hash-affine multi-replica routing (DESIGN.md §11): placement
+determinism, merged-map parity with a single engine, cache-hit affinity,
+p2c spill behavior, shared-store replica boot."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.apps.ppsp import make_bfs_engine
+from repro.core.runtime import DONE
+from repro.core.store import Store, save_engine_store
+from repro.launch.loadgen import constant_arrivals, run_open_loop
+from repro.launch.router import POLICIES, ReplicaPool, boot_replicas_from_store
+
+
+def _pairs(graph, n_pairs, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        (int(a), int(b))
+        for a, b in rng.integers(0, graph.n_real, (n_pairs, 2))
+    ]
+
+
+def _queries(graph, n, seed=0):
+    return [jnp.asarray(p, jnp.int32) for p in _pairs(graph, n, seed)]
+
+
+def _norm(results):
+    return {
+        q: {k: np.asarray(v).tolist() for k, v in r.items()}
+        for q, r in results.items()
+    }
+
+
+def _pool(graph, n, *, policy="affine", capacity=2, **kw):
+    reps = [make_bfs_engine(graph, capacity=capacity, **kw)
+            for _ in range(n)]
+    return ReplicaPool(reps, policy=policy)
+
+
+# ----------------------------------------------------------- determinism
+def test_home_of_deterministic_across_pools(small_directed):
+    g = small_directed
+    queries = _queries(g, 12, seed=1)
+    pool_a = _pool(g, 4)
+    pool_b = _pool(g, 4)
+    homes_a = [pool_a.home_of(q) for q in queries]
+    homes_b = [pool_b.home_of(q) for q in queries]
+    assert homes_a == homes_b
+    # content-derived, not identity-derived: a fresh copy routes the same
+    assert pool_a.home_of(jnp.asarray(np.asarray(queries[0]))) == homes_a[0]
+    # and the hash actually spreads keys across replicas
+    assert len(set(homes_a)) > 1
+
+
+def test_affine_routes_repeats_to_same_replica(small_directed):
+    g = small_directed
+    pool = _pool(g, 3, policy="affine")
+    q = jnp.asarray((0, 7), jnp.int32)
+    home = pool.home_of(q)
+    for _ in range(5):
+        pool.submit(q)
+    assert pool.submits[home] == 5
+    assert sum(pool.submits) == 5
+
+
+def test_bad_policy_and_empty_pool(small_directed):
+    with pytest.raises(ValueError, match="unknown routing policy"):
+        _pool(small_directed, 2, policy="random")
+    with pytest.raises(ValueError, match="at least one replica"):
+        ReplicaPool([])
+
+
+# ----------------------------------------------------- single-engine parity
+@pytest.mark.parametrize("scheduler,preemptive", [
+    ("fifo", False), ("sjf", False), ("deadline", False), ("sjf", True),
+])
+@pytest.mark.parametrize("policy", POLICIES)
+def test_pool_matches_single_engine(small_directed, scheduler, preemptive,
+                                    policy):
+    """Merged router result map identical to a single-engine run: same
+    global qids, same per-query results, all DONE."""
+    g = small_directed
+    queries = _queries(g, 10, seed=2)
+    budgets = [60 if i % 3 else 200 for i in range(len(queries))]
+
+    single = make_bfs_engine(g, capacity=2, scheduler=scheduler,
+                             preemptive=preemptive)
+    for q, b in zip(queries, budgets):
+        single.submit(q, budget=b)
+    single.run_until_drained()
+
+    pool = _pool(g, 2, policy=policy, capacity=2, scheduler=scheduler,
+                 preemptive=preemptive)
+    for q, b in zip(queries, budgets):
+        pool.submit(q, budget=b)
+    merged = pool.drain()
+
+    assert sorted(merged) == sorted(single.runtime.results)
+    assert _norm(merged) == _norm(single.runtime.results)
+    assert pool.status == dict(single.runtime.status)
+    assert all(st == DONE for st in pool.status.values())
+
+
+def test_pool_pump_drain_equivalence(small_directed):
+    """Same submits through pump-until-done vs drain(): identical
+    results/status/steps, each completion reported exactly once."""
+    g = small_directed
+    queries = _queries(g, 8, seed=3)
+
+    pool_a = _pool(g, 2)
+    for q in queries:
+        pool_a.submit(q)
+    pool_a.drain()
+
+    pool_b = _pool(g, 2)
+    qids = [pool_b.submit(q) for q in queries]
+    reported = []
+    for _ in range(1000):
+        reported += [qid for qid, _, _ in pool_b.pump()]
+        if len(reported) == len(qids):
+            break
+    assert sorted(reported) == sorted(qids)
+    assert pool_b.pump() == []
+    assert _norm(pool_b.results) == _norm(pool_a.results)
+    assert pool_b.status == pool_a.status
+    assert pool_b.steps == pool_a.steps
+
+
+def test_pool_poll_and_counters(small_directed):
+    g = small_directed
+    pool = _pool(g, 2)
+    qid = pool.submit(jnp.asarray((0, 9), jnp.int32))
+    assert pool.poll(qid) is None
+    assert pool.pending() + pool.inflight() >= 1
+    pool.drain()
+    status, res = pool.poll(qid)
+    assert status == DONE and "dist" in res
+    assert pool.pending() == 0 and pool.inflight() == 0
+
+
+# ------------------------------------------------------------ cache affinity
+def _zipf_mix(keys, n, seed=0, alpha=1.1):
+    rng = np.random.default_rng(seed)
+    p = 1.0 / np.arange(1, len(keys) + 1) ** alpha
+    p /= p.sum()
+    return [keys[i] for i in rng.choice(len(keys), size=n, p=p)]
+
+
+def test_affine_cache_hits_beat_round_robin(small_directed):
+    """K keys, R replicas, per-replica LRU of K/R + slack: under affine
+    each replica only ever sees its 1/R of the key space (fits), under rr
+    every replica sees all K keys (thrashes)."""
+    g = small_directed
+    keys = _queries(g, 12, seed=4)
+    mix = _zipf_mix(keys, 80, seed=5)
+
+    hits = {}
+    for policy in ("affine", "rr"):
+        pool = _pool(g, 2, policy=policy, result_cache=8)
+        for q in mix:  # closed-loop: repeats arrive after originals finish
+            pool.submit(q)
+            pool.drain()
+        hits[policy] = pool.cache_hits
+        assert all(st == DONE for st in pool.status.values())
+    assert hits["affine"] > hits["rr"]
+
+
+def test_affine_hits_match_single_engine_hit_count(small_directed):
+    """Affinity preserves per-key cache locality exactly: total pool hits
+    equal a single engine with the same per-replica cache size serving the
+    same stream (every repeat after the first is a hit in both)."""
+    g = small_directed
+    keys = _queries(g, 6, seed=6)
+    mix = _zipf_mix(keys, 30, seed=7)
+
+    single = make_bfs_engine(g, capacity=2, result_cache=8)
+    for q in mix:
+        single.submit(q)
+        single.run_until_drained()
+
+    pool = _pool(g, 2, policy="affine", result_cache=8)
+    for q in mix:
+        pool.submit(q)
+        pool.drain()
+    assert pool.cache_hits > 0
+    assert pool.cache_hits == single.stats.cache_hits
+    assert _norm(pool.results) == _norm(single.runtime.results)
+
+
+# --------------------------------------------------------------------- p2c
+def test_p2c_spills_hot_key_and_stays_correct(small_directed):
+    """A single hot key overloads its home; p2c routes the excess to the
+    hash-derived alternate once the load gap clears the affinity bonus —
+    and the merged results still match a single engine."""
+    g = small_directed
+    hot = jnp.asarray((0, 33), jnp.int32)
+    pool = _pool(g, 2, policy="p2c", capacity=1)
+    home = pool.home_of(hot)
+    for _ in range(8):  # no pumping between submits: backlog piles up
+        pool.submit(hot)
+    assert pool.spills > 0
+    assert pool.submits[1 - home] > 0
+    pool.drain()
+
+    single = make_bfs_engine(g, capacity=1)
+    for _ in range(8):
+        single.submit(hot)
+    single.run_until_drained()
+    assert _norm(pool.results) == _norm(single.runtime.results)
+    assert pool.stats_summary()["spills"] == pool.spills
+
+
+def test_p2c_idle_pool_keeps_affinity(small_directed):
+    """With no backlog the load gap never clears the bonus, so p2c
+    degrades to pure affinity (zero spills)."""
+    g = small_directed
+    pool = _pool(g, 2, policy="p2c")
+    for q in _queries(g, 6, seed=8):
+        pool.submit(q)
+        pool.drain()
+    assert pool.spills == 0
+
+
+# ------------------------------------------------------------- shared boot
+def test_boot_replicas_from_store_single_read(tmp_path, small_directed):
+    g = small_directed
+    store = Store(str(tmp_path / "store"))
+    save_engine_store(store, g)
+
+    built = []
+
+    def factory(i, parts):
+        built.append(i)
+        eng = make_bfs_engine(parts["graph"], capacity=2)
+        return eng
+
+    reps = boot_replicas_from_store(store, factory, 3)
+    assert built == [0, 1, 2]
+    assert len(reps) == 3
+    # all replicas share the SAME in-memory graph: no per-replica reload
+    g0 = reps[0].runtime.program.graph
+    assert all(r.runtime.program.graph is g0 for r in reps[1:])
+
+    pool = ReplicaPool(reps, policy="affine")
+    queries = _queries(g, 6, seed=9)
+    for q in queries:
+        pool.submit(q)
+    merged = pool.drain()
+
+    single = make_bfs_engine(g, capacity=2)
+    for q in queries:
+        single.submit(q)
+    single.run_until_drained()
+    assert _norm(merged) == _norm(single.runtime.results)
+
+
+# ----------------------------------------------------- loadgen integration
+def test_pool_as_open_loop_target(small_directed):
+    """ReplicaPool satisfies the load generator's duck type; the run is
+    deterministic under the virtual clock."""
+    g = small_directed
+    queries = _queries(g, 8, seed=10)
+    arr = constant_arrivals(2.0, len(queries))
+    runs = []
+    for _ in range(2):
+        pool = _pool(g, 2, policy="affine")
+        res = run_open_loop(pool, queries, arr, offered_qps=2.0)
+        runs.append(res)
+    assert runs[0].latencies == runs[1].latencies
+    assert runs[0].statuses == runs[1].statuses
+    assert all(st == DONE for st in runs[0].statuses.values())
+    s = runs[0].summary()
+    assert s["statuses"] == {DONE: len(queries)}
