@@ -102,23 +102,30 @@ class HubLabelBFS(VertexProgram):
 
 
 def build_hub_index(graph: Graph, k: int, capacity: int = 8, backend: str = "coo",
-                    **kw) -> HubIndex:
+                    hubs=None, **kw) -> HubIndex:
     """Run the |H| BFS queries through the engine and assemble the labels.
 
     HubLabelBFS mixes min_right (distance) and max_right (pre-flag) on the
     SAME view, and one tile table encodes exactly one add-identity
     (DESIGN.md §2) — the engine's tile backends build one table per
     semiring on demand, so no table plumbing is needed here.
+
+    ``hubs`` pins an explicit hub set (default: ``pick_hubs(graph, k)``) —
+    the incremental-maintenance parity tests rebuild against the mutated
+    graph with the OLD hub set pinned, since ``maintain_hub_index`` keeps
+    hubs fixed on the incremental path.
     """
-    index, _ = _build_hub_index_counted(graph, k, capacity, backend, **kw)
+    index, _ = _build_hub_index_counted(graph, k, capacity, backend,
+                                        hubs=hubs, **kw)
     return index
 
 
 def _build_hub_index_counted(graph: Graph, k: int, capacity: int = 8,
-                             backend: str = "coo", **kw):
+                             backend: str = "coo", hubs=None, **kw):
     """(HubIndex, engine rounds spent building) — the round count is what
     the store's zero-rebuild guarantee is asserted against."""
-    hubs = pick_hubs(graph, k)
+    hubs = pick_hubs(graph, k) if hubs is None \
+        else np.asarray(hubs, np.int32)
     is_hub = jnp.zeros((graph.n,), bool).at[jnp.asarray(hubs)].set(True)
     eng = QuegelEngine(
         graph,
@@ -166,6 +173,138 @@ def load_or_build_hub_index(store, graph: Graph, k: int, capacity: int = 8,
     return index, {
         "built": True, "index_rounds": int(rounds), "graph_hash": ghash,
     }
+
+
+# ------------------------------------------------ incremental maintenance
+def _relabel_hubs(graph: Graph, is_hub, hub_ids, rows):
+    """Label BFS for ``rows`` hub queries on ``graph`` — semantics
+    identical to :class:`HubLabelBFS` (1-based Pregel supersteps, a
+    frontier-gated min_right distance lane plus a max_right sender-flag
+    lane), but in plain numpy on the host: maintenance re-runs only the
+    affected rows, and an engine construction + compile per delta — or
+    even per-superstep jnp dispatch — would swamp the incremental win it
+    exists to deliver.  A vertex is newly reached iff it has a frontier
+    in-neighbor (every frontier sender carries a finite distance), and its
+    pre flag is set iff some such sender is another hub or flagged itself.
+    Returns ``(dist, pre)`` as ``(m, V)`` numpy arrays."""
+    src = np.asarray(graph.src)
+    dst = np.asarray(graph.dst)
+    n = graph.n
+    is_hub_np = np.asarray(is_hub)
+    hubs = np.asarray(hub_ids, np.int32)[np.asarray(rows)]
+    dist = np.full((len(hubs), n), INF, np.int32)
+    pre = np.zeros((len(hubs), n), bool)
+    for q, h in enumerate(int(h) for h in hubs):
+        other_hub = is_hub_np.copy()
+        other_hub[h] = False
+        dq, pq = dist[q], pre[q]
+        dq[h] = 0
+        frontier = np.zeros(n, bool)
+        frontier[h] = True
+        step = 0
+        while frontier.any():
+            step += 1  # Pregel supersteps are 1-based, as in HubLabelBFS
+            e = frontier[src]
+            reach = np.zeros(n, bool)
+            reach[dst[e]] = True
+            # flag lane, evaluated on the step-start pre (as the engine
+            # does: sender_flag is read before this superstep's updates)
+            flagged = np.zeros(n, bool)
+            flagged[dst[e & (other_hub | pq)[src]]] = True
+            newly = reach & (dq >= INF)
+            dq[newly] = step
+            pq |= newly & flagged
+            frontier = newly
+    return dist, pre
+
+
+def affected_hubs(index: HubIndex, delta) -> np.ndarray:
+    """Hub rows whose labels (dist or pre flags) can change under ``delta``.
+
+    With ``d_h = hub_dist[h]`` on the PRE-mutation graph:
+
+    * insert (u, v) affects h  iff  d_h[u] + 1 <= d_h[v] — strict ``<``
+      shortens some distance; equality adds a shortest-path-DAG edge,
+      which can only flip pre flags (a tie path through another hub).
+    * delete (u, v) affects h  iff  d_h[u] + 1 == d_h[v] — only edges ON
+      the shortest-path DAG of h carry its BFS; removing a non-DAG edge
+      changes neither distances nor flags.
+
+    INF arithmetic is safe: ``INF + 1 <= d`` is false for any label
+    (labels are bounded by INF), evaluated in int64.
+    """
+    hd = np.asarray(index.hub_dist).astype(np.int64)  # (k, V)
+    aff = np.zeros(hd.shape[0], bool)
+    if len(delta.add_src):
+        u, v = np.asarray(delta.add_src), np.asarray(delta.add_dst)
+        aff |= (hd[:, u] + 1 <= hd[:, v]).any(axis=1)
+    if len(delta.del_src):
+        u, v = np.asarray(delta.del_src), np.asarray(delta.del_dst)
+        aff |= (hd[:, u] + 1 == hd[:, v]).any(axis=1)
+    return np.nonzero(aff)[0]
+
+
+def maintain_hub_index(graph: Graph, index: HubIndex, delta, *,
+                       threshold: float = 0.01, capacity: int = 8,
+                       backend: str = "coo", **kw):
+    """Maintain a Hub² index across one ``Graph.apply_delta`` (DESIGN.md
+    §12).  Returns ``(new_index, info)``.
+
+    Small deltas (``delta.size <= threshold * |E|``) take the incremental
+    path: the hub set stays FIXED, only the rows ``affected_hubs`` names
+    are re-labeled (an eager batched BFS, no engine build), and the
+    ``core`` mask is recomputed for exactly those rows.  Past the
+    threshold the whole index is rebuilt via :func:`build_hub_index`,
+    re-picking hubs from the mutated degree distribution.
+
+    Fixed-hub incremental maintenance is SOUND — ``Hub2PPSP`` answers
+    correctly under any hub set — but hub quality can drift as mutations
+    reshape degrees; the rebuild threshold is also the quality backstop.
+
+    ``info``: mode ('incremental'|'rebuild'), k, frac (delta.size/|E|),
+    affected_hubs (k on rebuild), threshold.
+    """
+    k = index.k
+    frac = delta.size / max(1, graph.num_edges)
+    base = dict(k=k, frac=float(frac), threshold=float(threshold))
+    if frac > threshold:
+        rebuilt, _ = _build_hub_index_counted(graph, k, capacity, backend,
+                                              **kw)
+        return rebuilt, dict(mode="rebuild", affected_hubs=k, **base)
+    rows = affected_hubs(index, delta)
+    if not len(rows):
+        return index, dict(mode="incremental", affected_hubs=0, **base)
+    dist_rows, pre_rows = _relabel_hubs(graph, index.is_hub, index.hub_ids,
+                                        rows)
+    hub_dist = np.asarray(index.hub_dist).copy()
+    core = np.asarray(index.core).copy()
+    is_hub_np = np.asarray(index.is_hub)
+    hub_dist[rows] = dist_rows
+    # pre is not stored in HubIndex (only needed transiently): recompute
+    # core for exactly the re-labeled rows from their fresh dist/pre.
+    core[rows] = (dist_rows < INF) & (~pre_rows | is_hub_np[None, :])
+    new_index = HubIndex(
+        hub_ids=index.hub_ids,
+        is_hub=index.is_hub,
+        hub_dist=jnp.asarray(hub_dist),
+        core=jnp.asarray(core),
+    )
+    return new_index, dict(mode="incremental", affected_hubs=int(len(rows)),
+                           **base)
+
+
+def hub_index_updater(threshold: float = 0.01, capacity: int = 8,
+                      backend: str = "coo", **kw):
+    """Factory for ``QuegelEngine(index_fn=...)``: adapts
+    :func:`maintain_hub_index` to the engine's index-maintainer protocol
+    ``fn(new_graph, old_index, delta) -> (new_index, info)``."""
+
+    def fn(new_graph, old_index, delta):
+        return maintain_hub_index(new_graph, old_index, delta,
+                                  threshold=threshold, capacity=capacity,
+                                  backend=backend, **kw)
+
+    return fn
 
 
 class Hub2PPSP(VertexProgram):

@@ -130,6 +130,20 @@ class ShardedBackend(PropagateBackend):
     def part_specs(self):
         return (P(self.axis, None),) * 4
 
+    def refresh(self, graph, delta=None):
+        """Re-partition the mutated graph's edges for the same mesh axis.
+
+        Deliberately NOT incremental: a delta can change the max bucket
+        size, which reshapes every (n_parts, Emax) partition array and
+        forces a re-trace regardless — the vectorized ``_pad_partition``
+        is one argsort over E, cheap next to that re-trace.
+        """
+        return ShardedBackend(
+            ShardedGraph(graph, self.sg.n_parts, partition=self.sg.partition),
+            self.mesh,
+            self.axis,
+        )
+
     def make_local(self, parts):
         """Propagate closure for use INSIDE an enclosing shard_map body.
 

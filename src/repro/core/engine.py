@@ -64,10 +64,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import Graph
+from repro.core.graph import EdgeDelta, Graph
 from repro.core.runtime import (
     DONE, QueryTimeoutError, ResumeAdmission, RoundOutcome, SlotProgram,
-    SlotRuntime, SlotStats)
+    SlotRuntime, SlotStats, default_cache_key)
 from repro.core.semiring import Semiring
 from repro.kernels import ops
 
@@ -147,6 +147,31 @@ class EngineStats(SlotStats):
         return self.rounds
 
 
+@dataclasses.dataclass
+class _Edition:
+    """One compiled graph version (DESIGN.md §12).
+
+    Every jitted round closure captures its graph/index/backend arrays as
+    trace constants, so a version bump cannot reuse them: the engine keeps
+    one edition — the immutable Graph snapshot plus its compiled round
+    entry points — per version still referenced by a live or suspended
+    query.  ``apply_delta`` installs a new edition and prunes editions no
+    reader can reach any more.
+    """
+
+    version: int
+    graph: Graph
+    index: Any
+    aux: dict                 # view name -> Graph (non-default views)
+    backends: dict            # view name -> PropagateBackend
+    round: Any = None         # fused/SPMD: jit (slots, vmask, *round_args)
+    round_admit: Any = None
+    round_resume: Any = None
+    round_args: tuple = ()    # SPMD: this edition's device-placed edge parts
+    admit: Any = None         # legacy: jit per-slot admission
+    super_round: Any = None   # legacy: jit (slots, vmask)
+
+
 class QuegelEngine(SlotProgram):
     """Superstep-sharing scheduler (paper §3).
 
@@ -221,6 +246,12 @@ class QuegelEngine(SlotProgram):
                 ``QueryJournal`` WAL of the query lifecycle, its in-flight
                 snapshot cadence, a ``StragglerMonitor`` fed per-round
                 wall time, and the poison-quarantine retry bound.
+    index_fn  : index maintainer for mutable graphs (DESIGN.md §12):
+                ``fn(new_graph, old_index, delta) -> (new_index, info)``,
+                called by ``apply_delta`` whenever the engine carries an
+                index (e.g. ``apps/hub2.py::hub_index_updater``).  Required
+                for ``apply_delta`` on indexed engines and for journal
+                replay of mutations after a crash.
     """
 
     def __init__(
@@ -230,6 +261,7 @@ class QuegelEngine(SlotProgram):
         capacity: int = 8,
         *,
         index: Any = None,
+        index_fn: Optional[Callable] = None,
         backend: Any = "coo",
         blocks: Optional[Any] = None,
         aux_graphs: Optional[dict] = None,
@@ -263,6 +295,7 @@ class QuegelEngine(SlotProgram):
         self.program = program
         self.capacity = int(capacity)
         self.index = index
+        self.index_fn = index_fn
         self.blocks = blocks
         self.propagate_override = dict(propagate_override or {})
         self.interpret = interpret
@@ -359,7 +392,6 @@ class QuegelEngine(SlotProgram):
             snapshot_every=snapshot_every, straggler=straggler,
             max_retries=max_retries,
         )
-        self._round_args: tuple = ()
         self._collective_model: Optional[dict] = None
         if example_query is None:
             raise ValueError("example_query required to shape the slot table")
@@ -389,6 +421,10 @@ class QuegelEngine(SlotProgram):
         return self._backends[which].propagate(sr, x, frontier)
 
     def _build(self, example_query):
+        """Version-agnostic scaffolding: the slot table, protos, extraction
+        and diagnostics.  Everything that captures graph arrays as jit
+        constants lives in per-version ``_Edition`` records built by
+        ``_make_edition`` (DESIGN.md §12)."""
         g, prog, C = self.graph, self.program, self.capacity
         proto_q = jax.tree.map(jnp.asarray, example_query)
         proto_state = prog.init(g, proto_q, self.index)
@@ -408,126 +444,6 @@ class QuegelEngine(SlotProgram):
             done=jnp.zeros((C,), bool),
         )
 
-        def admit(slots, idx, query):
-            st = prog.init(g, query, self.index)
-            slots = dict(slots)
-            slots["state"] = jax.tree.map(
-                lambda tab, v: tab.at[idx].set(v), slots["state"], st
-            )
-            slots["query"] = jax.tree.map(
-                lambda tab, v: tab.at[idx].set(v), slots["query"], query
-            )
-            slots["step"] = slots["step"].at[idx].set(0)
-            slots["live"] = slots["live"].at[idx].set(True)
-            slots["done"] = slots["done"].at[idx].set(False)
-            return slots
-
-        def admit_batch(slots, admit_mask, queries):
-            """Fill all newly-assigned slots in ONE dispatch (DESIGN.md §3).
-
-            admit_mask : (C,) bool — True where a query is being admitted.
-            queries    : (C, ...) query pytree *aligned by slot* (row s is
-                         the query admitted into slot s; non-admitted rows
-                         hold the old slot query).  Host-side alignment
-                         turns admission into a branch-free masked select —
-                         no XLA scatter, which is slow on CPU.
-            """
-            st = jax.vmap(lambda q: prog.init(g, q, self.index))(queries)
-            slots = dict(slots)
-            slots["state"] = tree_where(admit_mask, st, slots["state"])
-            slots["query"] = tree_where(admit_mask, queries, slots["query"])
-            slots["step"] = jnp.where(admit_mask, 0, slots["step"])
-            slots["live"] = slots["live"] | admit_mask
-            slots["done"] = slots["done"] & ~admit_mask
-            return slots
-
-        def admit_batch_resume(slots, admit_mask, queries, resume_mask,
-                               rstate, rsteps):
-            """Batched admission with suspended queries resuming alongside
-            fresh ones: fresh rows (admit_mask) run ``init``; resume rows
-            (resume_mask) restore the host-collected state and superstep
-            counter instead — suspension must be observationally
-            equivalent to never having been admitted, modulo the steps
-            already charged (DESIGN.md §9)."""
-            st = jax.vmap(lambda q: prog.init(g, q, self.index))(queries)
-            st = tree_where(resume_mask, rstate, st)
-            both = admit_mask | resume_mask
-            slots = dict(slots)
-            slots["state"] = tree_where(both, st, slots["state"])
-            slots["query"] = tree_where(both, queries, slots["query"])
-            slots["step"] = jnp.where(
-                resume_mask, rsteps, jnp.where(admit_mask, 0, slots["step"])
-            )
-            slots["live"] = slots["live"] | both
-            slots["done"] = slots["done"] & ~both
-            return slots
-
-        def make_super_round(prop):
-            """ONE superstep for every live slot, with ``prop`` as the
-            propagation entry point — the engine's own backends outside a
-            mesh, or the per-device local closures inside the SPMD round.
-            ``done`` ACCUMULATES (a slot finishing at superstep j of a
-            multi-step round must still read True at the round's single
-            readback); callers zero it at round entry via ``zero_done``."""
-
-            def one(state, query, step, live):
-                ctx = StepCtx(
-                    graph=g,
-                    query=query,
-                    step=step + 1,  # Pregel supersteps are 1-based
-                    propagate=prop,
-                    index=self.index,
-                )
-                new_state, done = prog.superstep(state, ctx)
-                state = tree_where(live, new_state, state)
-                return state, done & live
-
-            def super_round(slots):
-                state, done = jax.vmap(one)(
-                    slots["state"], slots["query"], slots["step"], slots["live"]
-                )
-                live = slots["live"]
-                return dict(
-                    state=state,
-                    query=slots["query"],
-                    step=slots["step"] + live.astype(jnp.int32),
-                    live=live & ~done,
-                    done=slots["done"] | done,
-                )
-
-            return super_round
-
-        def zero_done(slots):
-            return dict(slots, done=jnp.zeros_like(slots["done"]))
-
-        spr = self.steps_per_round
-
-        def make_round_k(prop):
-            """Up to ``spr`` supersteps in ONE dispatch, early-exiting as
-            soon as every live slot has voted done — barrier count drops
-            ~spr× while per-slot ``step`` counters stay exact."""
-            super_round = make_super_round(prop)
-
-            def round_k(slots):
-                slots = zero_done(slots)
-                if spr == 1:
-                    return super_round(slots)
-
-                def cond(carry):
-                    s, it = carry
-                    return (it < spr) & s["live"].any()
-
-                def body(carry):
-                    s, it = carry
-                    return super_round(s), it + 1
-
-                slots, _ = jax.lax.while_loop(
-                    cond, body, (slots, jnp.asarray(0, jnp.int32))
-                )
-                return slots
-
-            return round_k
-
         def extract(slots, idx):
             st = jax.tree.map(lambda tab: tab[idx], slots["state"])
             q = jax.tree.map(lambda tab: tab[idx], slots["query"])
@@ -535,28 +451,10 @@ class QuegelEngine(SlotProgram):
 
         self._extract = jax.jit(extract)
 
-        # Discovery pass: abstractly trace ONE round with a shape-preserving
-        # recording propagate.  This (a) learns every (view, semiring) the
-        # program propagates so tile backends can build their per-semiring
-        # tables eagerly, OUTSIDE any jit trace (an in-trace build would
-        # cache that trace's constants), and (b) records the per-superstep
-        # propagate payloads the SPMD collective model reports.
-        self._prop_trace: list = []
-
-        def recording(sr, x, frontier=None, which="default"):
-            self._prop_trace.append(
-                (which, sr, tuple(x.shape), np.dtype(x.dtype))
-            )
-            return x
-
-        jax.eval_shape(make_round_k(recording), self._slots)
-        for which, sr, _, _ in self._prop_trace:
-            warm = getattr(self._backends[which], "table_for", None)
-            if warm is not None:
-                warm(sr)
         if self.legacy:
-            self._admit = jax.jit(admit)
-
+            # resume restoration is a pure scatter of host-collected state
+            # — no graph constants, so ONE jitted closure serves every
+            # edition (fresh admission does run ``init`` and is per-edition)
             def admit_resume(slots, idx, query, state, steps):
                 slots = dict(slots)
                 slots["state"] = jax.tree.map(
@@ -570,33 +468,8 @@ class QuegelEngine(SlotProgram):
                 slots["done"] = slots["done"].at[idx].set(False)
                 return slots
 
-            self._admit_resume = jax.jit(admit_resume)
-            legacy_round = make_super_round(self._propagate)
-            self._super_round = jax.jit(lambda s: legacy_round(zero_done(s)))
-        elif self.mesh is not None:
-            self._build_spmd(make_round_k, admit_batch, admit_batch_resume)
+            self._legacy_admit_resume = jax.jit(admit_resume)
         else:
-            round_k = make_round_k(self._propagate)
-            # Donating the slot table lets XLA alias every (C, V, ...) slab
-            # output to its input: the hot loop mutates in place, no copy.
-            dn = (0,) if self.donate else ()
-            self._round = jax.jit(round_k, donate_argnums=dn)
-            self._round_admit = jax.jit(
-                lambda slots, admit_mask, queries: round_k(
-                    admit_batch(slots, admit_mask, queries)
-                ),
-                donate_argnums=dn,
-            )
-            # separate entry so rounds with no resuming query keep the
-            # no-resume hot path (and its compiled trace) untouched
-            self._round_resume = jax.jit(
-                lambda slots, am, q, rm, rst, rsp: round_k(
-                    admit_batch_resume(slots, am, q, rm, rst, rsp)
-                ),
-                donate_argnums=dn,
-            )
-
-        if not self.legacy:
 
             def extract_all(slots):
                 return jax.vmap(prog.extract)(slots["state"], slots["query"])
@@ -622,8 +495,223 @@ class QuegelEngine(SlotProgram):
 
             self._frontier_count = jax.jit(frontier_count)
 
+        # Graph versioning (DESIGN.md §12): _slot_version pins each slot to
+        # the version it was admitted under; _resume_refs pins editions
+        # referenced only by suspended (off-device) payloads.
+        self._editions: dict[int, _Edition] = {}
+        self._resume_refs: dict[int, int] = {}
+        self._slot_version = np.full((C,), int(g.version), dtype=np.int64)
+        self._slots_placed = False
+        ed = self._make_edition(
+            g, self.index,
+            {k: gb[0] for k, gb in self.aux_graphs.items()},
+            self._backends,
+        )
+        self._editions[ed.version] = ed
+        self._current_version = ed.version
+
+    def _make_edition(self, graph, index, aux, backends) -> _Edition:
+        """Compile every round-path closure against ONE graph version.
+
+        All closures capture the LOCAL ``graph``/``index``/``backends``
+        (never ``self.graph``) so an installed edition keeps answering on
+        its own snapshot while ``self.*`` moves on to the next version.
+        Every entry point takes a per-version ``vmask``: the dispatch
+        advances only the slots pinned to this version, leaving other
+        versions' live/done/step rows untouched — ``slot_round`` dispatches
+        once per version present in the slot table, so mixed-version rounds
+        still pay one device->host sync total.
+        """
+        g, prog, C = graph, self.program, self.capacity
+        ed = _Edition(version=int(graph.version), graph=graph, index=index,
+                      aux=dict(aux), backends=dict(backends))
+
+        def propagate(sr, x, frontier=None, which="default"):
+            return backends[which].propagate(sr, x, frontier)
+
+        def admit(slots, idx, query):
+            st = prog.init(g, query, index)
+            slots = dict(slots)
+            slots["state"] = jax.tree.map(
+                lambda tab, v: tab.at[idx].set(v), slots["state"], st
+            )
+            slots["query"] = jax.tree.map(
+                lambda tab, v: tab.at[idx].set(v), slots["query"], query
+            )
+            slots["step"] = slots["step"].at[idx].set(0)
+            slots["live"] = slots["live"].at[idx].set(True)
+            slots["done"] = slots["done"].at[idx].set(False)
+            return slots
+
+        def admit_batch(slots, admit_mask, queries):
+            """Fill all newly-assigned slots in ONE dispatch (DESIGN.md §3).
+
+            admit_mask : (C,) bool — True where a query is being admitted.
+            queries    : (C, ...) query pytree *aligned by slot* (row s is
+                         the query admitted into slot s; non-admitted rows
+                         hold the old slot query).  Host-side alignment
+                         turns admission into a branch-free masked select —
+                         no XLA scatter, which is slow on CPU.
+            """
+            st = jax.vmap(lambda q: prog.init(g, q, index))(queries)
+            slots = dict(slots)
+            slots["state"] = tree_where(admit_mask, st, slots["state"])
+            slots["query"] = tree_where(admit_mask, queries, slots["query"])
+            slots["step"] = jnp.where(admit_mask, 0, slots["step"])
+            slots["live"] = slots["live"] | admit_mask
+            slots["done"] = slots["done"] & ~admit_mask
+            return slots
+
+        def admit_batch_resume(slots, admit_mask, queries, resume_mask,
+                               rstate, rsteps):
+            """Batched admission with suspended queries resuming alongside
+            fresh ones: fresh rows (admit_mask) run ``init``; resume rows
+            (resume_mask) restore the host-collected state and superstep
+            counter instead — suspension must be observationally
+            equivalent to never having been admitted, modulo the steps
+            already charged (DESIGN.md §9)."""
+            st = jax.vmap(lambda q: prog.init(g, q, index))(queries)
+            st = tree_where(resume_mask, rstate, st)
+            both = admit_mask | resume_mask
+            slots = dict(slots)
+            slots["state"] = tree_where(both, st, slots["state"])
+            slots["query"] = tree_where(both, queries, slots["query"])
+            slots["step"] = jnp.where(
+                resume_mask, rsteps, jnp.where(admit_mask, 0, slots["step"])
+            )
+            slots["live"] = slots["live"] | both
+            slots["done"] = slots["done"] & ~both
+            return slots
+
+        def make_super_round(prop):
+            """ONE superstep for this version's live slots, with ``prop``
+            as the propagation entry point — the edition's own backends
+            outside a mesh, or the per-device local closures inside the
+            SPMD round.  ``done`` ACCUMULATES (a slot finishing at
+            superstep j of a multi-step round must still read True at the
+            round's single readback); callers zero this version's flags at
+            round entry via ``zero_done``."""
+
+            def one(state, query, step, adv):
+                ctx = StepCtx(
+                    graph=g,
+                    query=query,
+                    step=step + 1,  # Pregel supersteps are 1-based
+                    propagate=prop,
+                    index=index,
+                )
+                new_state, done = prog.superstep(state, ctx)
+                state = tree_where(adv, new_state, state)
+                return state, done & adv
+
+            def super_round(slots, vmask):
+                adv = slots["live"] & vmask
+                state, done = jax.vmap(one)(
+                    slots["state"], slots["query"], slots["step"], adv
+                )
+                return dict(
+                    state=state,
+                    query=slots["query"],
+                    step=slots["step"] + adv.astype(jnp.int32),
+                    live=slots["live"] & ~done,
+                    done=slots["done"] | done,
+                )
+
+            return super_round
+
+        def zero_done(slots, vmask):
+            # clear only THIS version's done flags at round entry: other
+            # versions' flags must survive to the round's single readback
+            return dict(slots, done=slots["done"] & ~vmask)
+
+        spr = self.steps_per_round
+
+        def make_round_k(prop):
+            """Up to ``spr`` supersteps in ONE dispatch, early-exiting as
+            soon as every slot of this version has voted done — barrier
+            count drops ~spr× while per-slot ``step`` counters stay
+            exact."""
+            super_round = make_super_round(prop)
+
+            def round_k(slots, vmask):
+                slots = zero_done(slots, vmask)
+                if spr == 1:
+                    return super_round(slots, vmask)
+
+                def cond(carry):
+                    s, it = carry
+                    return (it < spr) & (s["live"] & vmask).any()
+
+                def body(carry):
+                    s, it = carry
+                    return super_round(s, vmask), it + 1
+
+                slots, _ = jax.lax.while_loop(
+                    cond, body, (slots, jnp.asarray(0, jnp.int32))
+                )
+                return slots
+
+            return round_k
+
+        # Discovery pass (per edition): abstractly trace ONE round with a
+        # shape-preserving recording propagate.  This (a) learns every
+        # (view, semiring) the program propagates so tile backends can
+        # build their per-semiring tables eagerly, OUTSIDE any jit trace
+        # (an in-trace build would cache that trace's constants), and (b)
+        # records the per-superstep propagate payloads the SPMD collective
+        # model reports.  A refreshed tile backend already carries its
+        # updated tables, so the warm call is a lookup, not a rebuild.
+        self._prop_trace = []
+
+        def recording(sr, x, frontier=None, which="default"):
+            self._prop_trace.append(
+                (which, sr, tuple(x.shape), np.dtype(x.dtype))
+            )
+            return x
+
+        jax.eval_shape(
+            make_round_k(recording), self._slots, jnp.zeros((C,), bool)
+        )
+        for which, sr, _, _ in self._prop_trace:
+            warm = getattr(backends[which], "table_for", None)
+            if warm is not None:
+                warm(sr)
+
+        if self.legacy:
+            ed.admit = jax.jit(admit)
+            legacy_round = make_super_round(propagate)
+            ed.super_round = jax.jit(
+                lambda s, vmask: legacy_round(zero_done(s, vmask), vmask)
+            )
+        elif self.mesh is not None:
+            self._build_spmd_edition(
+                ed, make_round_k, admit_batch, admit_batch_resume
+            )
+        else:
+            round_k = make_round_k(propagate)
+            # Donating the slot table lets XLA alias every (C, V, ...) slab
+            # output to its input: the hot loop mutates in place, no copy.
+            dn = (0,) if self.donate else ()
+            ed.round = jax.jit(round_k, donate_argnums=dn)
+            ed.round_admit = jax.jit(
+                lambda slots, admit_mask, queries, vmask: round_k(
+                    admit_batch(slots, admit_mask, queries), vmask
+                ),
+                donate_argnums=dn,
+            )
+            # separate entry so rounds with no resuming query keep the
+            # no-resume hot path (and its compiled trace) untouched
+            ed.round_resume = jax.jit(
+                lambda slots, am, q, rm, rst, rsp, vmask: round_k(
+                    admit_batch_resume(slots, am, q, rm, rst, rsp), vmask
+                ),
+                donate_argnums=dn,
+            )
+        return ed
+
     # ---------------------------------------------------------------- SPMD
-    def _build_spmd(self, make_round_k, admit_batch, admit_batch_resume):
+    def _build_spmd_edition(self, ed: _Edition, make_round_k, admit_batch,
+                            admit_batch_resume):
         """Compile the fused round as ONE shard_map over the mesh axis.
 
         V-sharded leaves (trailing dim == |V|) are all-gathered at round
@@ -639,7 +727,7 @@ class QuegelEngine(SlotProgram):
 
         from repro.core.distributed import _shard_map
 
-        g, C = self.graph, self.capacity
+        g, C = ed.graph, self.capacity
         mesh, axis, nparts = self.mesh, self._mesh_axis, self._n_parts
 
         def is_vq(leaf):
@@ -657,10 +745,10 @@ class QuegelEngine(SlotProgram):
         query_specs = jax.tree.map(
             lambda leaf: P(*([None] * jnp.ndim(leaf))), self._slots["query"]
         )
-        self._edge_parts = {k: be.parts for k, be in self._backends.items()}
+        edge_parts = {k: be.parts for k, be in ed.backends.items()}
         edge_specs = {
             k: jax.tree.map(lambda _: P(axis, None), v)
-            for k, v in self._edge_parts.items()
+            for k, v in edge_parts.items()
         }
 
         def gather(slots):
@@ -683,70 +771,78 @@ class QuegelEngine(SlotProgram):
             return jax.tree.map(f, slots, shard_tree)
 
         def local_prop(parts):
-            fns = {k: self._backends[k].make_local(parts[k]) for k in parts}
+            fns = {k: ed.backends[k].make_local(parts[k]) for k in parts}
 
             def prop(sr, x, frontier=None, which="default"):
                 return fns[which](sr, x, frontier)
 
             return prop
 
-        def body_round(slots, parts):
+        def body_round(slots, vmask, parts):
             rk = make_round_k(local_prop(parts))
-            return scatter(rk(gather(slots)))
+            return scatter(rk(gather(slots), vmask))
 
-        def body_admit(slots, admit_mask, queries, parts):
+        def body_admit(slots, admit_mask, queries, vmask, parts):
             rk = make_round_k(local_prop(parts))
-            return scatter(rk(admit_batch(gather(slots), admit_mask, queries)))
+            return scatter(
+                rk(admit_batch(gather(slots), admit_mask, queries), vmask)
+            )
 
         def body_resume(slots, admit_mask, queries, resume_mask, rstate,
-                        rsteps, parts):
+                        rsteps, vmask, parts):
             # resume state arrives replicated (host-collected full rows);
             # admission happens on the gathered full-V table, and the exit
             # scatter re-shards the restored V-partitioned leaves.
             rk = make_round_k(local_prop(parts))
             return scatter(rk(admit_batch_resume(
                 gather(slots), admit_mask, queries, resume_mask, rstate,
-                rsteps)))
+                rsteps), vmask))
 
         state_specs = jax.tree.map(
             lambda leaf: P(*([None] * jnp.ndim(leaf))), self._slots["state"]
         )
         dn = (0,) if self.donate else ()
-        self._round = jax.jit(
+        ed.round = jax.jit(
             _shard_map(
                 body_round, mesh,
-                in_specs=(slot_specs, edge_specs), out_specs=slot_specs,
-            ),
-            donate_argnums=dn,
-        )
-        self._round_admit = jax.jit(
-            _shard_map(
-                body_admit, mesh,
-                in_specs=(slot_specs, P(None), query_specs, edge_specs),
+                in_specs=(slot_specs, P(None), edge_specs),
                 out_specs=slot_specs,
             ),
             donate_argnums=dn,
         )
-        self._round_resume = jax.jit(
+        ed.round_admit = jax.jit(
+            _shard_map(
+                body_admit, mesh,
+                in_specs=(slot_specs, P(None), query_specs, P(None),
+                          edge_specs),
+                out_specs=slot_specs,
+            ),
+            donate_argnums=dn,
+        )
+        ed.round_resume = jax.jit(
             _shard_map(
                 body_resume, mesh,
                 in_specs=(slot_specs, P(None), query_specs, P(None),
-                          state_specs, P(None), edge_specs),
+                          state_specs, P(None), P(None), edge_specs),
                 out_specs=slot_specs,
             ),
             donate_argnums=dn,
         )
 
-        # Place the slot table and edge partitions once, in the layout the
-        # round expects, so no per-call resharding (and donation can alias).
+        # Place the slot table (once — editions share it) and this
+        # edition's edge partitions in the layout the round expects, so no
+        # per-call resharding (and donation can alias).
         to_shardings = lambda specs: jax.tree.map(
             lambda s: NamedSharding(mesh, s), specs, is_leaf=is_p
         )
-        self._slots = jax.device_put(self._slots, to_shardings(slot_specs))
-        self._edge_parts = jax.device_put(
-            self._edge_parts, to_shardings(edge_specs)
-        )
-        self._round_args = (self._edge_parts,)
+        if not self._slots_placed:
+            self._slots = jax.device_put(
+                self._slots, to_shardings(slot_specs)
+            )
+            self._slots_placed = True
+        edge_parts = jax.device_put(edge_parts, to_shardings(edge_specs))
+        ed.round_args = (edge_parts,)
+        self._edge_parts = edge_parts  # current edition's, for introspection
 
         # Collective payload model from the discovery pass (_build): one
         # entry per propagate call per superstep, each a (C, ..., V) slab.
@@ -800,55 +896,102 @@ class QuegelEngine(SlotProgram):
         the same dispatch.  The done/step readback below is THE barrier —
         one device->host sync per super-round.
 
+        Versioning (DESIGN.md §12): fresh admissions pin their slot to the
+        CURRENT graph version; resume admissions re-pin to the version in
+        their suspend payload.  Slots of each version advance through that
+        version's edition (one dispatch per version present — normally
+        exactly one), and the single readback at the end covers them all.
+
         Legacy mode preserves the pre-overhaul structure for the A/B
         baseline: a liveness readback before the round (the extra sync the
         overhaul removed) and one admission dispatch per query.
         """
+        C = self.capacity
+        cur = self._current_version
+        fresh: dict[int, Any] = {}
+        resumes: dict[int, tuple] = {}
+        for slot, q in admitted.items():
+            if isinstance(q, ResumeAdmission):
+                payload = q.payload
+                if isinstance(payload, dict) and "v" in payload \
+                        and "state" in payload:
+                    v, state = int(payload["v"]), payload["state"]
+                else:  # pre-versioning payload (external caller): current
+                    v, state = cur, payload
+                if v not in self._editions:
+                    raise RuntimeError(
+                        f"cannot resume query pinned to graph version {v}: "
+                        "edition was pruned (resume payloads must keep "
+                        "their version referenced via slot_register_resume)"
+                    )
+                self._release_resume_ref(v)
+                self._slot_version[slot] = v
+                resumes[slot] = (q.query, state, q.steps, v)
+            else:
+                self._slot_version[slot] = cur
+                fresh[slot] = q
+        # the runtime's host liveness mirror already includes this round's
+        # admissions; every live slot belongs to exactly one version group
+        live = np.asarray(self.runtime.live)
+        versions = sorted(
+            {int(self._slot_version[s]) for s in range(C) if live[s]}
+        ) or [cur]
+
         if self.legacy:
             # The pre-overhaul round paid two extra device->host liveness
             # syncs: free-slot discovery before admission, and the
             # any-live check after it.  Keep both so the A/B baseline
             # stays faithful (DESIGN.md §3).
             _ = np.asarray(self._slots["live"])
-            for slot, q in admitted.items():
-                if isinstance(q, ResumeAdmission):
-                    self._slots = self._admit_resume(
-                        self._slots, slot, q.query, q.payload,
-                        jnp.asarray(q.steps, jnp.int32),
-                    )
-                else:
-                    self._slots = self._admit(self._slots, slot, q)
-            _ = np.asarray(self._slots["live"]).any()
-            self._slots = self._super_round(self._slots)
-        elif admitted:
-            C = self.capacity
-            admit_mask = np.zeros((C,), bool)
-            resume_mask = np.zeros((C,), bool)
-            by_slot = [self._proto_q_np] * C
-            by_state = [self._proto_state_np] * C
-            rsteps = np.zeros((C,), np.int32)
-            for slot, q in admitted.items():
-                if isinstance(q, ResumeAdmission):
-                    resume_mask[slot] = True
-                    by_slot[slot] = q.query
-                    by_state[slot] = q.payload
-                    rsteps[slot] = q.steps
-                else:
-                    admit_mask[slot] = True
-                    by_slot[slot] = q
-            queries = jax.tree.map(lambda *xs: np.stack(xs), *by_slot)
-            if resume_mask.any():
-                rstate = jax.tree.map(lambda *xs: np.stack(xs), *by_state)
-                self._slots = self._round_resume(
-                    self._slots, admit_mask, queries, resume_mask, rstate,
-                    rsteps, *self._round_args
+            for slot, q in fresh.items():
+                self._slots = self._editions[cur].admit(self._slots, slot, q)
+            for slot, (query, state, steps, v) in resumes.items():
+                self._slots = self._legacy_admit_resume(
+                    self._slots, slot, query, state,
+                    jnp.asarray(steps, jnp.int32),
                 )
-            else:
-                self._slots = self._round_admit(
-                    self._slots, admit_mask, queries, *self._round_args
+            _ = np.asarray(self._slots["live"]).any()
+            for v in versions:
+                vmask = (self._slot_version == v) & live
+                self._slots = self._editions[v].super_round(
+                    self._slots, vmask
                 )
         else:
-            self._slots = self._round(self._slots, *self._round_args)
+            for v in versions:
+                ed = self._editions[v]
+                vmask = (self._slot_version == v) & live
+                vfresh = fresh if v == cur else {}
+                vres = {s: r for s, r in resumes.items() if r[3] == v}
+                if vfresh or vres:
+                    admit_mask = np.zeros((C,), bool)
+                    resume_mask = np.zeros((C,), bool)
+                    by_slot = [self._proto_q_np] * C
+                    by_state = [self._proto_state_np] * C
+                    rsteps = np.zeros((C,), np.int32)
+                    for slot, q in vfresh.items():
+                        admit_mask[slot] = True
+                        by_slot[slot] = q
+                    for slot, (query, state, steps, _) in vres.items():
+                        resume_mask[slot] = True
+                        by_slot[slot] = query
+                        by_state[slot] = state
+                        rsteps[slot] = steps
+                    queries = jax.tree.map(lambda *xs: np.stack(xs), *by_slot)
+                    if resume_mask.any():
+                        rstate = jax.tree.map(
+                            lambda *xs: np.stack(xs), *by_state
+                        )
+                        self._slots = ed.round_resume(
+                            self._slots, admit_mask, queries, resume_mask,
+                            rstate, rsteps, vmask, *ed.round_args
+                        )
+                    else:
+                        self._slots = ed.round_admit(
+                            self._slots, admit_mask, queries, vmask,
+                            *ed.round_args
+                        )
+                else:
+                    self._slots = ed.round(self._slots, vmask, *ed.round_args)
         return RoundOutcome(
             done=np.asarray(self._slots["done"]),
             steps=np.asarray(self._slots["step"]),
@@ -885,20 +1028,260 @@ class QuegelEngine(SlotProgram):
         the hot path — one host readback per suspension, like the paper's
         console suspend.  Works identically for fused, legacy and SPMD
         tables (np.asarray gathers V-sharded leaves to one host copy; the
-        resume round's exit scatter re-shards them)."""
+        resume round's exit scatter re-shards them).
+
+        The payload carries the slot's pinned graph version (DESIGN.md
+        §12) so resumption — possibly after mutations, possibly after a
+        crash — re-enters on the SAME edition the state was computed on;
+        the version's resume refcount keeps that edition from pruning
+        while the payload is off-device."""
         idx = [int(s) for s in slots]
         state_np = jax.tree.map(np.asarray, self._slots["state"])
-        payloads = [
-            jax.tree.map(lambda tab: tab[s].copy(), state_np) for s in idx
-        ]
+        payloads = []
+        for s in idx:
+            v = int(self._slot_version[s])
+            self._resume_refs[v] = self._resume_refs.get(v, 0) + 1
+            payloads.append({
+                "v": v,
+                "state": jax.tree.map(lambda tab: tab[s].copy(), state_np),
+            })
         self.slot_evict(idx)
         return payloads
+
+    def slot_register_resume(self, payload) -> None:
+        """A journal-replayed suspend payload re-entered the queue
+        (``SlotRuntime.restore_pending``): re-pin its graph edition so
+        pruning cannot drop it before the resume round (DESIGN.md §12)."""
+        if isinstance(payload, dict) and "v" in payload:
+            v = int(payload["v"])
+            if v not in self._editions:
+                raise RuntimeError(
+                    f"resume payload references graph version {v} but no "
+                    "such edition exists — replay the journal's mutation "
+                    "records (apply_delta_record) before restore_pending"
+                )
+            self._resume_refs[v] = self._resume_refs.get(v, 0) + 1
+
+    def _release_resume_ref(self, v: int) -> None:
+        c = self._resume_refs.get(v, 0)
+        if c <= 1:
+            self._resume_refs.pop(v, None)
+        else:
+            self._resume_refs[v] = c - 1
+
+    # ------------------------------------------------- version-keyed cache
+    def cache_key(self, query) -> str:
+        """Submit-time cache key: prefixed by the CURRENT graph version's
+        content hash, so a lookup can only hit results computed on the
+        graph the submitter would query (DESIGN.md §12)."""
+        return self.graph.content_hash() + ":" + default_cache_key(query)
+
+    def cache_key_for_slot(self, query, slot: int) -> str:
+        """Retirement-time cache key: prefixed by the content hash of the
+        edition the slot was PINNED to — which may be older than current
+        if the query ran across a mutation.  Editions are pruned only
+        between rounds (``apply_delta``), never mid-retirement, so the
+        pinned edition is still installed here."""
+        ed = self._editions.get(int(self._slot_version[int(slot)]))
+        g = self.graph if ed is None else ed.graph
+        return g.content_hash() + ":" + default_cache_key(query)
 
     def slot_observe(self) -> None:
         if self._frontier_count is not None:
             self.stats.frontier_active.append(
                 int(self._frontier_count(self._slots))
             )
+
+    # ------------------------------------------------------ graph mutation
+    def apply_delta(self, adds=None, dels=None, *, w=None,
+                    aux_deltas: Any = "reverse", index_fn=None,
+                    prune: bool = True, _from_journal: bool = False) -> dict:
+        """Mutate the graph between rounds (DESIGN.md §12): apply a batched
+        edge delta, bump the version, and install a new edition — views
+        merged incrementally (``Graph.apply_delta`` + per-backend
+        ``refresh``), index maintained via ``index_fn``, result cache
+        invalidated down to the new version's entries.  In-flight queries
+        keep answering on the version they were admitted under.
+
+        adds/dels : ``(k, 2)`` (src, dst) pair arrays (or (src, dst)
+                    tuples); ``adds`` may instead be a prevalidated
+                    ``EdgeDelta``.  ``w`` gives per-added-edge weights.
+        aux_deltas: how auxiliary views follow the default view's delta —
+                    ``"reverse"`` (default; every aux view is the
+                    edge-reversed graph, as for every in-repo engine) maps
+                    the delta through ``EdgeDelta.reversed()``; or a dict
+                    {view: EdgeDelta | (adds, dels) | None} (None = view
+                    unaffected: graph, backend and tables are reused).
+        index_fn  : overrides the constructor's ``index_fn`` for this call.
+        prune     : drop editions no live slot, suspended payload or the
+                    current version references (keep False while replaying
+                    a journal, where later records may resume older
+                    versions).
+
+        Returns {version, parent_hash, content_hash, delta_size,
+        cache_invalidated, editions, index} — ``index`` is the maintainer's
+        info dict (e.g. incremental-vs-rebuild mode), None when indexless.
+        """
+        if self.propagate_override:
+            raise ValueError(
+                "apply_delta cannot refresh propagate_override callables: "
+                "override closures capture graph arrays the engine cannot "
+                "see; rebuild the engine instead"
+            )
+        cur = self._editions[self._current_version]
+        if isinstance(adds, EdgeDelta):
+            if dels is not None or w is not None:
+                raise ValueError(
+                    "pass either a prevalidated EdgeDelta or adds/dels/w "
+                    "arrays, not both"
+                )
+            delta = adds
+        else:
+            delta = cur.graph.make_delta(adds, dels, w=w)
+        fn = index_fn if index_fn is not None else self.index_fn
+        if cur.index is not None and fn is None:
+            raise ValueError(
+                "engine carries an index but no index maintainer: pass "
+                "index_fn= (e.g. apps/hub2.py::hub_index_updater(...)) at "
+                "construction or to apply_delta"
+            )
+
+        rt = self.runtime
+        old_hash = cur.graph.content_hash()
+        if rt.journal is not None and not _from_journal:
+            # WAL in-flight state BEFORE the mutation record: each snapshot
+            # payload pins its pre-mutation version, so recovery replays
+            # submit -> snapshot -> mutation in order and every resumed
+            # query still answers on the version it was admitted under.
+            rt.snapshot()
+
+        new_graph = cur.graph.apply_delta(delta)
+
+        # ---- auxiliary views: derive each view's delta, reuse untouched
+        aux_delta: dict = {}
+        if aux_deltas == "reverse":
+            rev = delta.reversed()
+            aux_delta = {name: rev for name in cur.aux}
+        elif aux_deltas is None or isinstance(aux_deltas, dict):
+            spec = dict(aux_deltas or {})
+            unknown = set(spec) - set(cur.aux)
+            if unknown:
+                raise ValueError(
+                    f"aux_deltas names unknown views {sorted(unknown)}: "
+                    f"engine has {sorted(cur.aux)}"
+                )
+            for name in cur.aux:
+                d = spec.get(name)
+                if d is not None and not isinstance(d, EdgeDelta):
+                    a_, d_ = d
+                    d = cur.aux[name].make_delta(a_, d_)
+                aux_delta[name] = d
+        else:
+            raise ValueError(
+                "aux_deltas must be 'reverse', None, or a "
+                "{view: EdgeDelta | (adds, dels) | None} dict"
+            )
+        new_aux: dict = {}
+        new_backends = {
+            "default": cur.backends["default"].refresh(new_graph, delta)
+        }
+        for name, g_old in cur.aux.items():
+            d = aux_delta[name]
+            if d is None:  # declared unaffected: reuse graph AND tables
+                new_aux[name] = g_old
+                new_backends[name] = cur.backends[name]
+            else:
+                g_new = g_old.apply_delta(d)
+                new_aux[name] = g_new
+                new_backends[name] = cur.backends[name].refresh(g_new, d)
+
+        # ---- index maintenance (incremental or rebuild — fn decides)
+        new_index, index_info = None, None
+        if cur.index is not None:
+            new_index, index_info = fn(new_graph, cur.index, delta)
+
+        new_hash = new_graph.content_hash()
+        if rt.journal is not None and not _from_journal:
+            rt.journal.mutation(
+                version=int(new_graph.version), parent_hash=old_hash,
+                content_hash=new_hash,
+                adds=np.stack([delta.add_src, delta.add_dst], axis=1),
+                add_w=delta.add_w,
+                dels=np.stack([delta.del_src, delta.del_dst], axis=1),
+            )
+
+        # ---- install the new edition; old ones stay until their readers go
+        ed = self._make_edition(new_graph, new_index, new_aux, new_backends)
+        self._editions[ed.version] = ed
+        self._current_version = ed.version
+        self.graph = new_graph
+        self.index = new_index
+        self._backends = new_backends
+        self.aux_graphs = {k: (g_, None) for k, g_ in new_aux.items()}
+
+        # ---- version-keyed cache invalidation: only entries whose prefix
+        # matches the new content hash stay servable.  (A retirement may
+        # later insert an old-version entry — harmless: submit-time keys
+        # carry the current prefix, so it is unreachable unless the content
+        # genuinely reverts, in which case serving it is byte-identical.)
+        invalidated = 0
+        if rt.cache is not None:
+            tok = new_hash + ":"
+            invalidated = rt.cache.invalidate(
+                lambda k: not str(k).startswith(tok)
+            )
+            rt.stats.cache_invalidations += invalidated
+        if prune:
+            self._prune_editions()
+        return dict(
+            version=ed.version, parent_hash=old_hash, content_hash=new_hash,
+            delta_size=delta.size, cache_invalidated=invalidated,
+            editions=sorted(self._editions), index=index_info,
+        )
+
+    def apply_delta_record(self, rec: dict) -> dict:
+        """Replay one journaled ``mutation`` record (recovery path,
+        launch/supervise.py).  The hash chain makes replay deterministic or
+        refused: the record's ``parent_hash`` must match the engine's
+        current content, and the replayed graph must reproduce the recorded
+        ``content_hash`` exactly."""
+        cur_hash = self._editions[self._current_version].graph.content_hash()
+        if rec["parent_hash"] != cur_hash:
+            raise RuntimeError(
+                "mutation chain mismatch: journal expects parent "
+                f"{rec['parent_hash'][:12]}… but the engine's graph hashes "
+                f"{cur_hash[:12]}… — booted from the wrong store snapshot "
+                "for this journal?"
+            )
+        adds = np.asarray(rec["adds"], np.int32).reshape(-1, 2)
+        dels = np.asarray(rec["dels"], np.int32).reshape(-1, 2)
+        info = self.apply_delta(
+            adds if len(adds) else None,
+            dels if len(dels) else None,
+            w=np.asarray(rec["add_w"]) if len(adds) else None,
+            prune=False, _from_journal=True,
+        )
+        if info["content_hash"] != rec["content_hash"]:
+            raise RuntimeError(
+                "mutation replay diverged: journal recorded content "
+                f"{rec['content_hash'][:12]}… but replay produced "
+                f"{info['content_hash'][:12]}…"
+            )
+        return info
+
+    def _prune_editions(self) -> None:
+        """Drop editions no reader can reach: not current, not pinned by a
+        live slot, not referenced by a suspended payload.  Called only
+        between rounds (from ``apply_delta``), never mid-retirement."""
+        live = np.asarray(self.runtime.live)
+        needed = {self._current_version}
+        needed.update(
+            int(self._slot_version[s])
+            for s in range(self.capacity) if live[s]
+        )
+        needed.update(v for v, c in self._resume_refs.items() if c > 0)
+        for v in [v for v in self._editions if v not in needed]:
+            del self._editions[v]
 
     # ---------------------------------------------- fault tolerance hooks
     def export_tables(self) -> dict:

@@ -46,8 +46,8 @@ class BlockSparse:
     block: int = dataclasses.field(metadata=dict(static=True))
     # (nb,) int32 — number of REAL source blocks per destination-block row;
     # slots >= nslots[i] are padding (identity tiles) and may be skipped by
-    # the gated kernels.  None on tables built before gating existed.
-    nslots: Optional[jnp.ndarray] = None
+    # the gated kernels.  Always present: every constructor fills it.
+    nslots: jnp.ndarray
 
     @property
     def num_dst_blocks(self) -> int:
@@ -56,6 +56,62 @@ class BlockSparse:
     @property
     def max_bpr(self) -> int:
         return self.src_ids.shape[1]
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeDelta:
+    """A validated, batched edge mutation (host-side numpy, never traced).
+
+    Semantics: deletions apply first, then insertions; an inserted
+    ``(src, dst)`` that already exists *replaces* its weight (upsert).
+    Built via :meth:`Graph.make_delta`, which validates endpoints against
+    ``n_real`` and checks every deletion names an existing edge.
+    """
+
+    add_src: np.ndarray  # (a,) int32
+    add_dst: np.ndarray  # (a,) int32
+    add_w: np.ndarray  # (a,) weight dtype
+    del_src: np.ndarray  # (d,) int32
+    del_dst: np.ndarray  # (d,) int32
+
+    @property
+    def size(self) -> int:
+        return int(len(self.add_src) + len(self.del_src))
+
+    @property
+    def is_empty(self) -> bool:
+        return self.size == 0
+
+    def reversed(self) -> "EdgeDelta":
+        """The same mutation on the edge-reversed graph (aux 'rev' views)."""
+        return EdgeDelta(self.add_dst, self.add_src, self.add_w,
+                         self.del_dst, self.del_src)
+
+    def touched_dst_blocks(self, block: int) -> np.ndarray:
+        """Destination-block rows whose tiles can change under this delta."""
+        if self.is_empty:
+            return np.zeros(0, dtype=np.int64)
+        d = np.concatenate([self.add_dst, self.del_dst])
+        return np.unique(d.astype(np.int64) // block)
+
+
+def _as_pairs(pairs, what: str):
+    """Normalize (k,2) array / (src, dst) tuple / None to two int32 arrays."""
+    if pairs is None:
+        z = np.zeros(0, dtype=np.int32)
+        return z, z.copy()
+    if isinstance(pairs, tuple) and len(pairs) == 2:
+        s = np.atleast_1d(np.asarray(pairs[0], dtype=np.int32))
+        d = np.atleast_1d(np.asarray(pairs[1], dtype=np.int32))
+        if s.shape != d.shape:
+            raise ValueError(f"{what}: src/dst length mismatch {s.shape} vs {d.shape}")
+        return s, d
+    a = np.asarray(pairs, dtype=np.int32)
+    if a.ndim == 1 and a.shape[0] == 2:
+        a = a[None, :]
+    if a.ndim != 2 or a.shape[1] != 2:
+        raise ValueError(f"{what}: expected (k, 2) pairs or (src, dst) arrays")
+    return a[:, 0].copy(), a[:, 1].copy()
 
 
 @jax.tree_util.register_dataclass
@@ -83,6 +139,14 @@ class Graph:
     csr_src: Optional[jnp.ndarray] = None  # (E,) int32, sorted
     csr_dst: Optional[jnp.ndarray] = None  # (E,) int32
     csr_w: Optional[jnp.ndarray] = None  # (E,)
+    # Mutation lineage (DESIGN.md §12): ``apply_delta`` bumps ``version`` and
+    # records the parent's content hash, forming a per-version hash chain the
+    # journal replays against.  Both are static (JSON-able) so they survive
+    # the durable store's manifest round-trip.
+    version: int = dataclasses.field(default=0, metadata=dict(static=True))
+    parent_hash: Optional[str] = dataclasses.field(
+        default=None, metadata=dict(static=True)
+    )
 
     @property
     def num_edges(self) -> int:
@@ -92,7 +156,15 @@ class Graph:
         """Stable sha256 over the logical graph (sizes + COO edges +
         weights).  The durable store (core/store.py) binds indexes and tile
         tables to the graph they were built against via this hash, so a
-        restored index can never be served over a different graph."""
+        restored index can never be served over a different graph.
+
+        Memoized: the arrays are immutable, so the digest is computed once
+        per Graph object.  The invalidation point is explicit — mutation
+        never edits arrays in place, :meth:`apply_delta` returns a *new*
+        Graph (with a fresh, empty memo)."""
+        memo = getattr(self, "_chash", None)
+        if memo is not None:
+            return memo
         import hashlib
 
         h = hashlib.sha256(f"{self.n}/{self.n_real}".encode())
@@ -100,7 +172,9 @@ class Graph:
             a = np.asarray(arr)
             h.update(str(a.dtype).encode())
             h.update(a.tobytes())
-        return h.hexdigest()
+        digest = h.hexdigest()
+        object.__setattr__(self, "_chash", digest)
+        return digest
 
     # ---------------------------------------------------------------- build
     @staticmethod
@@ -230,6 +304,197 @@ class Graph:
             tiles=jnp.asarray(tiles),
             block=block,
             nslots=jnp.asarray([len(r) for r in rows], dtype=jnp.int32),
+        )
+
+    # ---------------------------------------------------------- mutation
+    def make_delta(self, adds=None, dels=None, *, w=None) -> EdgeDelta:
+        """Validate and normalize a batched edge mutation against this graph.
+
+        ``adds``/``dels`` are ``(k, 2)`` ``(src, dst)`` pair arrays (or
+        ``(src_array, dst_array)`` tuples); ``w`` gives per-added-edge
+        weights (default 1, cast to the graph's weight dtype).  Raises
+        ``ValueError`` — leaving the graph untouched — when an endpoint
+        falls outside the real vertex range ``[0, n_real)`` (padding
+        vertices never carry edges) or a deletion names an absent edge.
+        Within one batch the last add of a given pair wins; a pair both
+        deleted and added nets out to the add (upsert).
+        """
+        a_s, a_d = _as_pairs(adds, "adds")
+        d_s, d_d = _as_pairs(dels, "dels")
+        wdtype = np.asarray(self.w).dtype
+        if w is None:
+            a_w = np.ones(len(a_s), dtype=wdtype)
+        else:
+            a_w = np.broadcast_to(np.asarray(w, dtype=wdtype), (len(a_s),)).copy()
+        for name, arr in (("adds", a_s), ("adds", a_d), ("dels", d_s), ("dels", d_d)):
+            if len(arr) and (int(arr.min()) < 0 or int(arr.max()) >= self.n_real):
+                raise ValueError(
+                    f"{name}: endpoint outside the real vertex range "
+                    f"[0, {self.n_real}) — padded vertices [{self.n_real}, "
+                    f"{self.n}) must stay edge-free"
+                )
+        n = np.int64(self.n)
+        if len(a_s):
+            key = a_d.astype(np.int64) * n + a_s
+            # keep the LAST occurrence of each added pair
+            _, ridx = np.unique(key[::-1], return_index=True)
+            idx = np.sort(len(key) - 1 - ridx)
+            a_s, a_d, a_w = a_s[idx], a_d[idx], a_w[idx]
+        if len(d_s):
+            key = d_d.astype(np.int64) * n + d_s
+            _, idx = np.unique(key, return_index=True)
+            idx = np.sort(idx)
+            d_s, d_d = d_s[idx], d_d[idx]
+            base = np.asarray(self.dst).astype(np.int64) * n + np.asarray(self.src)
+            missing = ~np.isin(d_d.astype(np.int64) * n + d_s, base)
+            if missing.any():
+                bad = [(int(s), int(d)) for s, d in
+                       zip(d_s[missing][:5], d_d[missing][:5])]
+                raise ValueError(f"dels: edges not present in graph: {bad}")
+        return EdgeDelta(a_s, a_d, a_w, d_s, d_d)
+
+    def apply_delta(self, adds=None, dels=None, *, w=None) -> "Graph":
+        """Return a new Graph with the delta applied and ``version`` bumped.
+
+        Both adjacency views are merged *incrementally*: matching rows are
+        masked out and new rows spliced into the existing dst-sorted COO and
+        src-sorted CSR arrays (``np.isin`` + ``searchsorted`` + ``insert``),
+        degrees patched by delta ``bincount`` — no O(E log E) re-sort, no
+        full rebuild.  ``csr_row`` is recomputed by binary search (cheap).
+        An empty delta is a version-bumping no-op sharing every array.
+        Duplicate (src, dst) rows in a multigraph are all replaced by one
+        row on upsert.
+        """
+        delta = adds if isinstance(adds, EdgeDelta) else self.make_delta(adds, dels, w=w)
+        parent = self.content_hash()
+        if delta.is_empty:
+            g = dataclasses.replace(
+                self, version=self.version + 1, parent_hash=parent
+            )
+            object.__setattr__(g, "_chash", parent)  # content unchanged
+            return g
+        if self.csr_row is None:
+            raise ValueError(
+                "apply_delta needs the CSR view; build the graph via "
+                "Graph.from_edges"
+            )
+        n = np.int64(self.n)
+        src, dst, w_ = np.asarray(self.src), np.asarray(self.dst), np.asarray(self.w)
+        a_s, a_d, a_w = delta.add_src, delta.add_dst, delta.add_w
+        # rows to drop: explicit deletions plus upserted (re-added) pairs
+        rm_s = np.concatenate([delta.del_src, a_s])
+        rm_d = np.concatenate([delta.del_dst, a_d])
+        keep = ~np.isin(dst.astype(np.int64) * n + src, rm_d.astype(np.int64) * n + rm_s)
+        rsrc, rdst = src[~keep], dst[~keep]  # removed rows → degree patch
+        ksrc, kdst, kw = src[keep], dst[keep], w_[keep]
+        order = np.argsort(a_d, kind="stable")
+        i_s, i_d, i_w = a_s[order], a_d[order], a_w[order]
+        pos = np.searchsorted(kdst, i_d, side="right")
+        new_src = np.insert(ksrc, pos, i_s)
+        new_dst = np.insert(kdst, pos, i_d)
+        new_w = np.insert(kw, pos, i_w)
+        in_deg = (np.asarray(self.in_deg)
+                  - np.bincount(rdst, minlength=self.n)
+                  + np.bincount(a_d, minlength=self.n)).astype(np.int32)
+        out_deg = (np.asarray(self.out_deg)
+                   - np.bincount(rsrc, minlength=self.n)
+                   + np.bincount(a_s, minlength=self.n)).astype(np.int32)
+        csrc = np.asarray(self.csr_src)
+        cdst = np.asarray(self.csr_dst)
+        cw = np.asarray(self.csr_w)
+        ckeep = ~np.isin(csrc.astype(np.int64) * n + cdst,
+                         rm_s.astype(np.int64) * n + rm_d)
+        kcsrc, kcdst, kcw = csrc[ckeep], cdst[ckeep], cw[ckeep]
+        # the CSR view is (src, dst)-lex sorted (stable argsort of the
+        # dst-sorted COO), so splice by the composite key
+        akey = a_s.astype(np.int64) * n + a_d
+        corder = np.argsort(akey, kind="stable")
+        j_s, j_d, j_w = a_s[corder], a_d[corder], a_w[corder]
+        cpos = np.searchsorted(kcsrc.astype(np.int64) * n + kcdst,
+                               akey[corder], side="right")
+        new_csrc = np.insert(kcsrc, cpos, j_s)
+        new_cdst = np.insert(kcdst, cpos, j_d)
+        new_cw = np.insert(kcw, cpos, j_w)
+        csr_row = np.searchsorted(new_csrc, np.arange(self.n + 1)).astype(np.int32)
+        return Graph(
+            n=self.n,
+            n_real=self.n_real,
+            src=jnp.asarray(new_src),
+            dst=jnp.asarray(new_dst),
+            w=jnp.asarray(new_w),
+            in_deg=jnp.asarray(in_deg),
+            out_deg=jnp.asarray(out_deg),
+            csr_row=jnp.asarray(csr_row),
+            csr_src=jnp.asarray(new_csrc),
+            csr_dst=jnp.asarray(new_cdst),
+            csr_w=jnp.asarray(new_cw),
+            version=self.version + 1,
+            parent_hash=parent,
+        )
+
+    def update_blocks(
+        self, bs: BlockSparse, add_id, touched=None, dtype=None
+    ) -> BlockSparse:
+        """Incrementally refresh a block-sparse table after :meth:`apply_delta`.
+
+        Only the dst-block rows in ``touched`` (from
+        ``EdgeDelta.touched_dst_blocks``) are rebuilt from this graph's COO
+        view — the whole point of keeping the COO dst-sorted: each row is an
+        O(log E) ``searchsorted`` slice.  The slot axis grows (never
+        shrinks) when a touched row gains source blocks; untouched rows are
+        byte-preserved.  ``bs`` must come from an ancestor of this graph
+        whose edges differ only inside ``touched`` rows.
+        """
+        block = bs.block
+        nb = _pad_to(self.n, block) // block
+        if nb != bs.num_dst_blocks:
+            raise ValueError("update_blocks: vertex count changed; use to_blocks")
+        if touched is None:
+            touched = np.arange(nb, dtype=np.int64)
+        touched = np.unique(np.asarray(touched, dtype=np.int64))
+        touched = touched[(touched >= 0) & (touched < nb)]
+        if len(touched) == 0:
+            return bs
+        src, dst, w = np.asarray(self.src), np.asarray(self.dst), np.asarray(self.w)
+        src_ids = np.array(bs.src_ids)
+        tiles = np.array(bs.tiles)
+        nslots = np.array(bs.nslots)
+        rows = {}
+        for i in touched:
+            lo = int(np.searchsorted(dst, i * block, side="left"))
+            hi = int(np.searchsorted(dst, (i + 1) * block, side="left"))
+            rows[int(i)] = (lo, hi, np.unique(src[lo:hi] // block))
+        need = max((len(sb) for _, _, sb in rows.values()), default=1)
+        if need > bs.max_bpr:
+            pad = need - bs.max_bpr
+            src_ids = np.pad(src_ids, ((0, 0), (0, pad)))
+            tiles = np.pad(tiles, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                           constant_values=add_id)
+        unsigned = np.issubdtype(tiles.dtype, np.unsignedinteger)
+        for i, (lo, hi, sb) in rows.items():
+            src_ids[i] = 0
+            src_ids[i, : len(sb)] = sb
+            tiles[i] = add_id
+            nslots[i] = len(sb)
+            slot_of = {int(b): k for k, b in enumerate(sb)}
+            for e in range(lo, hi):
+                k = slot_of[int(src[e]) // block]
+                r, c = int(src[e] % block), int(dst[e] % block)
+                if unsigned:
+                    tiles[i, k, r, c] |= w[e]
+                elif add_id == 0:
+                    tiles[i, k, r, c] += w[e]
+                elif add_id > 0:
+                    tiles[i, k, r, c] = min(tiles[i, k, r, c], w[e])
+                else:
+                    tiles[i, k, r, c] = max(tiles[i, k, r, c], w[e])
+        if dtype is not None and tiles.dtype != dtype:
+            tiles = tiles.astype(dtype)
+        return BlockSparse(
+            src_ids=jnp.asarray(src_ids),
+            tiles=jnp.asarray(tiles),
+            block=block,
+            nslots=jnp.asarray(nslots),
         )
 
 

@@ -104,6 +104,9 @@ class SlotStats:
     timeouts: int = 0
     rejected: int = 0
     cache_hits: int = 0
+    # cached results dropped because a graph mutation made their version's
+    # entries unreachable (DESIGN.md §12)
+    cache_invalidations: int = 0
     supersteps_total: int = 0
     # preemption (DESIGN.md §9): suspensions, resume re-admissions, and the
     # high-water mark of in-flight queries (live slots + suspended) — the
@@ -359,6 +362,16 @@ class ResultCache:
         while len(self._d) > self.size:
             self._d.popitem(last=False)
 
+    def invalidate(self, pred) -> int:
+        """Drop every entry whose key satisfies ``pred``; returns the count.
+        Used by version-keyed invalidation after a graph mutation
+        (DESIGN.md §12): entries keyed to any other graph version become
+        unreachable and are evicted in one sweep."""
+        doomed = [k for k in self._d if pred(k)]
+        for k in doomed:
+            del self._d[k]
+        return len(doomed)
+
     def __len__(self) -> int:
         return len(self._d)
 
@@ -432,6 +445,10 @@ class QueryJournal:
       snapshot {qid, seq, priority, deadline, budget, steps, payload}
                (periodic in-flight state via ``slot_suspend``; the newest
                snapshot per qid wins on replay)
+      mutation {version, parent_hash, content_hash, adds, add_w, dels}
+               (a graph delta, DESIGN.md §12 — replayed in order against a
+               content-hash chain so recovery rebuilds the exact version
+               sequence, or refuses on divergence)
 
     ``fsync=True`` (default) makes every append durable before the runtime
     proceeds — the crash-safety contract; benches can relax it to measure
@@ -485,6 +502,20 @@ class QueryJournal:
             "payload": _journal_enc(ticket.resume),
         })
 
+    def mutation(self, *, version: int, parent_hash: str, content_hash: str,
+                 adds, add_w, dels) -> None:
+        """WAL one graph delta (DESIGN.md §12).  ``adds``/``dels`` are
+        (k, 2) (src, dst) pair arrays; the parent/content hashes chain the
+        versions so replay is deterministic or refuses."""
+        self.append({
+            "type": "mutation", "version": int(version),
+            "parent_hash": str(parent_hash),
+            "content_hash": str(content_hash),
+            "adds": _journal_enc(np.asarray(adds, np.int32).reshape(-1, 2)),
+            "add_w": _journal_enc(np.asarray(add_w)),
+            "dels": _journal_enc(np.asarray(dels, np.int32).reshape(-1, 2)),
+        })
+
     def close(self) -> None:
         self._f.close()
 
@@ -516,7 +547,13 @@ class QueryJournal:
                     rec["result"] = _journal_dec(rec["result"])
                 elif rec["type"] == "snapshot":
                     rec["payload"] = _journal_dec(rec["payload"])
-                if rec.get("deadline") is None and rec["type"] != "retire":
+                elif rec["type"] == "mutation":
+                    rec["adds"] = _journal_dec(rec["adds"])
+                    rec["add_w"] = _journal_dec(rec["add_w"])
+                    rec["dels"] = _journal_dec(rec["dels"])
+                if rec.get("deadline") is None and rec["type"] in (
+                    "submit", "snapshot"
+                ):
                     rec["deadline"] = math.inf
                 out.append(rec)
         return out
@@ -587,6 +624,20 @@ class SlotProgram:
 
     def cache_key(self, query) -> str:
         return default_cache_key(query)
+
+    def cache_key_for_slot(self, query, slot: int) -> str:
+        """Cache key for a result RETIRING from ``slot``.  Programs that
+        serve multiple graph versions (DESIGN.md §12) override this to key
+        by the version the slot was pinned to, so a result computed on an
+        old version can never be served against the new graph."""
+        return self.cache_key(query)
+
+    def slot_register_resume(self, payload) -> None:
+        """Notify the program that a previously-suspended payload has been
+        re-queued (journal recovery / restore_pending).  Versioned programs
+        use this to re-pin the graph edition the payload references
+        (DESIGN.md §12); the default program keeps no such state."""
+        return None
 
 
 # ------------------------------------------------------------------- runtime
@@ -981,7 +1032,12 @@ class SlotRuntime:
                 )
                 key = self._qid_key.pop(tk.qid, None)
                 if self.cache is not None and key is not None:
-                    self.cache.put(key, res)
+                    # re-key at retirement: a versioned program pins the
+                    # entry to the graph edition the slot actually ran on
+                    # (DESIGN.md §12), not the version current at submit.
+                    self.cache.put(
+                        self.program.cache_key_for_slot(tk.query, slot), res
+                    )
             else:
                 self.stats.timeouts += 1
                 self._qid_key.pop(tk.qid, None)
@@ -1074,6 +1130,7 @@ class SlotRuntime:
             # _admit_from_queue decrements the suspended count when a
             # resume ticket re-enters; balance it here.
             self._n_suspended += 1
+            self.program.slot_register_resume(payload)
         self._next_qid = max(self._next_qid, qid + 1)
         self._seq = max(self._seq, seq + 1)
 

@@ -335,7 +335,14 @@ def save_engine_store(store: Store, graph, *, index=None, aux_graphs=None,
     its content hash so a restored index is never applied to a different
     graph.  Returns {entry name: meta}."""
     ghash = graph.content_hash()
-    meta = {"graph_hash": ghash}
+    # version + parent hash make the stored snapshot a point on the
+    # mutation chain (DESIGN.md §12): recovery boots from it and replays
+    # the journal's mutation records, which verify parentage against this.
+    meta = {
+        "graph_hash": ghash,
+        "graph_version": int(getattr(graph, "version", 0)),
+        "parent_hash": getattr(graph, "parent_hash", None),
+    }
     written = {}
     store.put("graph", graph, shards=shards, shard_dim=graph.n, meta=meta)
     written["graph"] = meta

@@ -60,10 +60,7 @@ def block_activity(bs: BlockSparse, mask) -> jnp.ndarray:
     still gates padding slots.
     """
     nb, b, m = bs.num_dst_blocks, bs.block, bs.max_bpr
-    if bs.nslots is not None:
-        valid = jnp.arange(m, dtype=jnp.int32)[None, :] < bs.nslots[:, None]
-    else:
-        valid = jnp.ones((nb, m), bool)
+    valid = jnp.arange(m, dtype=jnp.int32)[None, :] < bs.nslots[:, None]
     if mask is None:
         return valid
     f = mask.any(axis=tuple(range(mask.ndim - 1)))  # (V,)
@@ -90,6 +87,19 @@ class PropagateBackend:
         engine passes the dict back as ``blocks=`` to skip the rebuild."""
         return None
 
+    def refresh(self, graph: Graph, delta=None) -> "PropagateBackend":
+        """A new backend of the same plan serving ``graph`` (DESIGN.md §12).
+
+        ``delta`` is the ``EdgeDelta`` that produced ``graph`` from this
+        backend's graph; plans with prepared state (tile tables, edge
+        partitions) use it to update incrementally rather than rebuild.
+        The receiver is left untouched — old editions keep serving
+        in-flight slots until their last reader retires.
+        """
+        raise NotImplementedError(
+            f"backend '{self.name}' does not support graph mutation"
+        )
+
 
 class CooBackend(PropagateBackend):
     """Segment-reduction over the destination-sorted COO view.
@@ -113,6 +123,11 @@ class CooBackend(PropagateBackend):
                 self.graph, sr, x, frontier, int(self.gather_edges)
             )
         return ref.propagate_coo(self.graph, sr, x, frontier)
+
+    def refresh(self, graph, delta=None):
+        # no prepared state beyond the graph views, which apply_delta
+        # already merged incrementally
+        return CooBackend(graph, gather_edges=self.gather_edges, gate=self.gate)
 
 
 class _TileBackend(PropagateBackend):
@@ -161,6 +176,41 @@ class _TileBackend(PropagateBackend):
         if self._shared is not None:
             return self._shared
         return dict(self.tables) or None
+
+    def refresh(self, graph, delta=None):
+        """Incrementally carry every cached tile table to ``graph``.
+
+        Each per-semiring table is patched via ``Graph.update_blocks`` on
+        the delta's touched dst-block rows only; without a delta the tables
+        are rebuilt in full.  A shared single-table backend refuses — its
+        add-identity is unknown, so the padding fill of grown slots would
+        be a guess.
+        """
+        import copy
+
+        from repro.core.semiring import BY_NAME
+
+        if self._shared is not None:
+            raise ValueError(
+                "cannot refresh a shared single-table tile backend: the "
+                "table's semiring (add_id) is unknown; construct with a "
+                "{sr.name: BlockSparse} dict instead"
+            )
+        tables = {}
+        for name, bs in self.tables.items():
+            sr = BY_NAME[name]
+            if delta is not None:
+                tables[name] = graph.update_blocks(
+                    bs, sr.add_id, delta.touched_dst_blocks(bs.block)
+                )
+            else:
+                tables[name] = graph.to_blocks(
+                    bs.block, sr.add_id, dtype=np.asarray(bs.tiles).dtype
+                )
+        new = copy.copy(self)
+        new.graph = graph
+        new.tables = tables
+        return new
 
     def propagate(self, sr, x, frontier=None):
         bs = self.table_for(sr)

@@ -33,6 +33,7 @@ The pool speaks the same open-loop duck type the load generator drives
 """
 from __future__ import annotations
 
+import hashlib
 from typing import Any, Callable, Optional, Sequence
 
 POLICIES = ("affine", "rr", "p2c")
@@ -73,8 +74,12 @@ class ReplicaPool:
     # ------------------------------------------------------------- routing
     def _key(self, query) -> str:
         """Canonical query hash — shared with the result cache, so
-        affinity and cache residency agree by construction."""
-        return self.replicas[0].runtime.program.cache_key(query)
+        affinity and cache residency agree by construction.  Cache keys
+        are graph-version-prefixed (``content_hash:query_hash``,
+        DESIGN.md §12), so routing re-digests the WHOLE key: the bits
+        must vary per query, not per graph."""
+        key = self.replicas[0].runtime.program.cache_key(query)
+        return hashlib.blake2b(key.encode()).hexdigest()
 
     def home_of(self, query) -> int:
         """The hash-affine home replica (deterministic across processes:

@@ -56,10 +56,14 @@ from repro.train.fault import FailureInjector, SimulatedFailure
 def fold_journal(records: list[dict]) -> dict:
     """Collapse an append-ordered record list into recovery state:
     ``submits`` (first record per qid), ``done`` (last retire per qid —
-    terminal), ``snaps`` (latest snapshot per still-running qid)."""
+    terminal), ``snaps`` (latest snapshot per still-running qid),
+    ``mutations`` (every graph-delta record, in WAL order — the
+    content-hash chain is replayed before any in-flight query resumes,
+    DESIGN.md §12)."""
     submits: dict[int, dict] = {}
     done: dict[int, dict] = {}
     snaps: dict[int, dict] = {}
+    mutations: list[dict] = []
     for r in records:
         t = r.get("type")
         if t == "submit":
@@ -69,8 +73,10 @@ def fold_journal(records: list[dict]) -> dict:
             snaps.pop(r["qid"], None)  # terminal: snapshot superseded
         elif t == "snapshot":
             snaps[r["qid"]] = r
+        elif t == "mutation":
+            mutations.append(r)
     return {"submits": submits, "done": done, "snaps": snaps,
-            "records": len(records)}
+            "mutations": mutations, "records": len(records)}
 
 
 def recover(runtime, journal_path: str) -> dict:
@@ -81,6 +87,22 @@ def recover(runtime, journal_path: str) -> dict:
     submits, done, snaps = state["submits"], state["done"], state["snaps"]
     for qid, r in sorted(done.items()):
         runtime.restore_retired(qid, r["status"], r["result"], r["steps"])
+    # Replay graph mutations BEFORE re-queueing in-flight queries: snapshot
+    # payloads pin pre-mutation versions, so every edition in the chain
+    # must exist when restore_pending re-registers them (prune=False keeps
+    # intermediate editions alive; the engine prunes on its next delta).
+    # The engine verifies the parent/content hash chain per record and
+    # refuses a journal that does not match the booted graph (DESIGN.md
+    # §12).  A mutation-free journal leaves indexless engines untouched.
+    if state["mutations"]:
+        prog = runtime.program
+        if not hasattr(prog, "apply_delta_record"):
+            raise RuntimeError(
+                "journal contains graph mutations but the booted program "
+                f"({type(prog).__name__}) cannot replay them"
+            )
+        for m in state["mutations"]:
+            prog.apply_delta_record(m)
     pending = sorted(
         (r for qid, r in submits.items() if qid not in done),
         key=lambda r: r["seq"],
@@ -106,6 +128,7 @@ def recover(runtime, journal_path: str) -> dict:
         "replayed_done": len(done),
         "resumed_from_snapshot": resumed,
         "resubmitted": len(pending) - resumed,
+        "mutations_replayed": len(state["mutations"]),
         "known_qids": set(submits),
     }
 
@@ -121,9 +144,16 @@ def run_with_recovery(
     fsync: bool = True,
     injector: Optional[FailureInjector] = None,
     max_rounds: int = 100_000,
+    on_round: Optional[Callable[[Any, int], None]] = None,
 ):
     """Drain ``submits`` through a journaled engine, recovering from
     crashes.  Returns ``(engine, info)`` once drained.
+
+    ``on_round(engine, executed_rounds)`` runs after every round — the
+    hook for scripted between-round graph mutations
+    (``engine.apply_delta``); guard on ``engine.graph.version`` so a
+    mutation already replayed from the journal after a crash is not
+    applied twice (the replay advances the version past the guard).
 
     ``boot()`` must return a fresh engine front end (``QuegelEngine``,
     ``SlotServer``, or anything owning a ``SlotRuntime``) with its
@@ -155,6 +185,8 @@ def run_with_recovery(
             while rt.pending() or rt.live.any():
                 rt.run_round()
                 rounds += 1
+                if on_round is not None:
+                    on_round(eng, rt.stats.rounds)
                 if injector is not None:
                     injector.check(rt.stats.rounds, engine=eng)
                 if rounds > max_rounds:
