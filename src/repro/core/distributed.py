@@ -71,7 +71,12 @@ def _pad_partition(src, dst, w, n_parts, key):
     key = np.asarray(key)
     order = np.argsort(key, kind="stable")
     counts = np.bincount(key, minlength=n_parts)
-    emax = int(max(1, counts.max())) if counts.size else 1
+    need = int(max(1, counts.max())) if counts.size else 1
+    # ~25% headroom (at least 4 rows' worth): ShardedGraph.apply_delta
+    # splices mutated rows IN PLACE as long as they fit Emax, and Emax is
+    # the shape every compiled SPMD round is keyed on — exact-fit buckets
+    # would turn any single-edge add into a full re-partition + re-trace.
+    emax = need + max(4, need // 4)
     rows = key[order]
     starts = np.concatenate(([0], np.cumsum(counts)))
     cols = np.arange(len(order)) - starts[rows]
@@ -97,15 +102,79 @@ class ShardedGraph:
         self.n_parts = n_parts
         self.partition = partition
         self.block = graph.n // n_parts
-        src = np.asarray(graph.src)
-        dst = np.asarray(graph.dst)
-        w = np.asarray(graph.w)
+        src, dst, w = graph._edges_np()
         key = (dst if partition == "dst" else src) // self.block
         srcp, dstp, wp, valid = _pad_partition(src, dst, w, n_parts, key)
         self.srcp = jnp.asarray(srcp)
         self.dstp = jnp.asarray(dstp)
         self.wp = jnp.asarray(wp)
         self.valid = jnp.asarray(valid)
+
+    @classmethod
+    def _from_parts(cls, graph, n_parts, partition, srcp, dstp, wp, valid):
+        sg = cls.__new__(cls)
+        sg.graph = graph
+        sg.n_parts = n_parts
+        sg.partition = partition
+        sg.block = graph.n // n_parts
+        sg.srcp = jnp.asarray(srcp)
+        sg.dstp = jnp.asarray(dstp)
+        sg.wp = jnp.asarray(wp)
+        sg.valid = jnp.asarray(valid)
+        return sg
+
+    def apply_delta(self, new_graph: Graph, delta) -> "ShardedGraph":
+        """Partitions of ``new_graph`` spliced from these, touching only the
+        rows ``delta`` can change (DESIGN.md §12 addendum).
+
+        Row ``r`` of a dst-partition holds exactly the COO edges with
+        ``dst // block == r`` in COO (dst-sorted) order, so a touched row is
+        rebuilt from two ``searchsorted`` slices of the new graph's COO view
+        — reproducing what a full ``_pad_partition`` would put there (its
+        stable argsort preserves within-bucket COO order).  src-partition
+        rows hold ``src // block == r`` in the same COO order, rebuilt by
+        one boolean pass.  Emax is deliberately KEPT: stable partition
+        shapes are what let the compiled SPMD round absorb the mutation
+        without a re-trace.  A touched row outgrowing Emax falls back to a
+        full re-partition (the shape change forces a re-trace regardless).
+        """
+        assert new_graph.n == self.graph.n, "vertex repad requires a rebuild"
+        if delta is None or delta.is_empty:
+            return ShardedGraph._from_parts(
+                new_graph, self.n_parts, self.partition,
+                self.srcp, self.dstp, self.wp, self.valid,
+            )
+        d = delta if self.partition == "dst" else delta.reversed()
+        touched = d.touched_dst_blocks(self.block)
+        touched = touched[(touched >= 0) & (touched < self.n_parts)]
+        emax = int(self.srcp.shape[1])
+        src, dst, w = new_graph._edges_np()
+        srcp, dstp = np.array(self.srcp), np.array(self.dstp)
+        wp, valid = np.array(self.wp), np.array(self.valid)
+        for r in touched:
+            r = int(r)
+            if self.partition == "dst":
+                lo = int(np.searchsorted(dst, r * self.block, side="left"))
+                hi = int(np.searchsorted(dst, (r + 1) * self.block, side="left"))
+                rs, rd, rw = src[lo:hi], dst[lo:hi], w[lo:hi]
+            else:
+                m = (src // self.block) == r
+                rs, rd, rw = src[m], dst[m], w[m]
+            k = len(rs)
+            if k > emax:
+                return ShardedGraph(new_graph, self.n_parts,
+                                    partition=self.partition)
+            srcp[r] = 0
+            dstp[r] = 0
+            wp[r] = 0
+            valid[r] = False
+            srcp[r, :k] = rs
+            dstp[r, :k] = rd
+            wp[r, :k] = rw
+            valid[r, :k] = True
+        return ShardedGraph._from_parts(
+            new_graph, self.n_parts, self.partition, srcp, dstp, wp, valid
+        )
 
 
 class ShardedBackend(PropagateBackend):
@@ -131,18 +200,35 @@ class ShardedBackend(PropagateBackend):
         return (P(self.axis, None),) * 4
 
     def refresh(self, graph, delta=None):
-        """Re-partition the mutated graph's edges for the same mesh axis.
+        """A backend of the same plan serving the mutated ``graph``.
 
-        Deliberately NOT incremental: a delta can change the max bucket
-        size, which reshapes every (n_parts, Emax) partition array and
-        forces a re-trace regardless — the vectorized ``_pad_partition``
-        is one argsort over E, cheap next to that re-trace.
+        With a ``delta``, only the partition rows it touches are re-spliced
+        (``ShardedGraph.apply_delta``) and Emax — hence every compiled
+        round's shapes — stays put, so SPMD mode absorbs in-capacity
+        mutations without a re-trace.  Without a delta (or when a touched
+        row outgrows Emax) the edges are fully re-partitioned; the
+        vectorized ``_pad_partition`` is one argsort over E, cheap next to
+        the re-trace the shape change forces anyway.
         """
-        return ShardedBackend(
-            ShardedGraph(graph, self.sg.n_parts, partition=self.sg.partition),
-            self.mesh,
-            self.axis,
-        )
+        if delta is not None:
+            sg = self.sg.apply_delta(graph, delta)
+        else:
+            sg = ShardedGraph(graph, self.sg.n_parts,
+                              partition=self.sg.partition)
+        return ShardedBackend(sg, self.mesh, self.axis)
+
+    def as_args(self, graph_carrier=None, *, slot_cap=None):
+        return {"parts": self.parts}
+
+    def from_args(self, args):
+        import copy
+
+        sg = copy.copy(self.sg)
+        sg.srcp, sg.dstp, sg.wp, sg.valid = args["parts"]
+        new = copy.copy(self)
+        new.sg = sg
+        new._jitted = {}
+        return new
 
     def make_local(self, parts):
         """Propagate closure for use INSIDE an enclosing shard_map body.

@@ -58,6 +58,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
+import time
 from typing import Any, Callable, Optional
 
 import jax
@@ -137,6 +139,14 @@ class EngineStats(SlotStats):
     # per-round active frontier vertex count, only when track_frontier=True
     # (costs one extra readback per round — diagnostics, not the hot path)
     frontier_active: list = dataclasses.field(default_factory=list)
+    # Times an engine-owned jitted entry point traced+compiled (DESIGN.md
+    # §12 addendum): every jit the engine builds routes through
+    # ``QuegelEngine._jit``, whose wrapped body runs exactly once per
+    # compile.  The per-version split lives in ``engine.compile_counts``.
+    # In arg-carried mode an in-capacity mutation must leave this flat.
+    jit_compiles: int = 0
+    # background edition warmups spawned (constant-closure mode)
+    warmups: int = 0
 
     @property
     def super_rounds(self) -> int:
@@ -151,12 +161,16 @@ class EngineStats(SlotStats):
 class _Edition:
     """One compiled graph version (DESIGN.md §12).
 
-    Every jitted round closure captures its graph/index/backend arrays as
-    trace constants, so a version bump cannot reuse them: the engine keeps
-    one edition — the immutable Graph snapshot plus its compiled round
-    entry points — per version still referenced by a live or suspended
-    query.  ``apply_delta`` installs a new edition and prunes editions no
-    reader can reach any more.
+    Constant-closure mode: every jitted round closure captures its
+    graph/index/backend arrays as trace constants, so a version bump cannot
+    reuse them — the engine keeps one edition (the immutable Graph snapshot
+    plus its compiled round entry points) per version still referenced by a
+    live or suspended query.  Argument-carried mode (§12 addendum) instead
+    points every edition at ONE shared set of jitted entries and puts the
+    version's arrays in ``round_args`` (the traced "carrier"), so an
+    in-capacity mutation reuses the compiled round bit-for-bit.
+    ``apply_delta`` installs a new edition and prunes editions no reader
+    can reach any more.
     """
 
     version: int
@@ -167,7 +181,7 @@ class _Edition:
     round: Any = None         # fused/SPMD: jit (slots, vmask, *round_args)
     round_admit: Any = None
     round_resume: Any = None
-    round_args: tuple = ()    # SPMD: this edition's device-placed edge parts
+    round_args: tuple = ()    # SPMD edge parts and/or the arg-carried carrier
     admit: Any = None         # legacy: jit per-slot admission
     super_round: Any = None   # legacy: jit (slots, vmask)
 
@@ -252,6 +266,32 @@ class QuegelEngine(SlotProgram):
                 index (e.g. ``apps/hub2.py::hub_index_updater``).  Required
                 for ``apply_delta`` on indexed engines and for journal
                 replay of mutations after a crash.
+    arg_carried : compile-once serving across graph versions (DESIGN.md
+                §12 addendum).  ``True``: the round's graph/index/backend
+                arrays are traced jit ARGUMENTS (capacity-padded for shape
+                stability) instead of closure constants, so an in-capacity
+                ``apply_delta`` reuses the compiled round with 0 recompiles
+                — mutate-to-first-answer drops from a full round compile to
+                the host splice.  ``'auto'`` (default): on past
+                ``arg_carried_threshold`` edges, where constant-folding no
+                longer pays for per-version recompiles; off below it.
+                ``False``: always constant-closure.  Incompatible with
+                ``legacy=True``, ``propagate_override`` and shared
+                single-table ``blocks=`` (pass a per-semiring dict).
+    arg_carried_threshold : edge count past which ``arg_carried='auto'``
+                enables argument-carried editions.
+    edge_capacity : initial padded edge capacity per view in arg-carried
+                mode (default: ~25% headroom over |E|).  Deltas that fit
+                change array values only; overflow grows capacity and pays
+                one real recompile.
+    warmup    : background edition warmup for constant-closure mode:
+                ``apply_delta`` returns immediately and the new edition's
+                round/round_admit/round_resume compile on a worker thread
+                while prior editions keep serving (mixed-version dispatch
+                makes this safe); the new edition swaps in atomically —
+                first dispatch after the warm finds the compile cache hot.
+                ``wait_warmup()`` joins outstanding warms.  No-op in
+                arg-carried mode (nothing to compile per edition).
     """
 
     def __init__(
@@ -286,6 +326,10 @@ class QuegelEngine(SlotProgram):
         snapshot_every: int = 0,
         straggler: Any = None,
         max_retries: int = 2,
+        arg_carried: Any = "auto",
+        arg_carried_threshold: int = 100_000,
+        edge_capacity: Optional[int] = None,
+        warmup: bool = False,
     ):
         """``propagate_override`` maps a view name ('default', 'rev', ...)
         to a callable (semiring, x, frontier) -> y — wrapped in a
@@ -379,6 +423,49 @@ class QuegelEngine(SlotProgram):
         for name, fn in self.propagate_override.items():
             self._backends[name] = ops.CallableBackend(fn)
 
+        # ---- argument-carried editions (DESIGN.md §12 addendum)
+        carriable = not self.legacy and all(
+            not isinstance(be, ops.CallableBackend)
+            and getattr(be, "_shared", None) is None
+            for be in self._backends.values()
+        )
+        if arg_carried == "auto":
+            self._arg_carried = (
+                carriable and graph.num_edges >= int(arg_carried_threshold)
+            )
+        elif arg_carried:
+            if not carriable:
+                raise ValueError(
+                    "arg_carried=True needs carriable backends: legacy=False, "
+                    "no propagate_override, and no shared single-table "
+                    "blocks= (pass a {sr.name: BlockSparse} dict instead)"
+                )
+            self._arg_carried = True
+        else:
+            self._arg_carried = False
+        self._edge_capacity = None if edge_capacity is None else int(edge_capacity)
+        self.warmup = bool(warmup)
+        if self.warmup and self.legacy:
+            raise ValueError(
+                "warmup=True needs the fused round (legacy admission "
+                "dispatches per query and cannot be pre-compiled generically)"
+            )
+        if self.warmup and mesh is not None:
+            raise ValueError(
+                "warmup=True is a single-device knob (a warm call with "
+                "unplaced copies would compile for the wrong shardings); "
+                "mesh mode absorbs mutations via arg_carried=True instead"
+            )
+        # compile accounting + arg-carried/warmup state, needed before _build
+        self.compile_counts: dict[int, int] = {}
+        self._dispatch_version = int(graph.version)
+        self._view_caps: dict[str, int] = {}
+        self._slot_caps: dict[str, int] = {}
+        self._ac_entries = None     # shared (round, admit, resume) jits
+        self._ac_protos: dict = {}  # plan-parameter templates for from_args
+        self._spmd_ac = None        # shared SPMD entries + shardings
+        self._warm_threads: list = []
+
         if donate == "auto":
             donate = jax.default_backend() not in ("cpu",)
         self.donate = bool(donate)
@@ -420,6 +507,23 @@ class QuegelEngine(SlotProgram):
     def _propagate(self, sr: Semiring, x, frontier=None, which: str = "default"):
         return self._backends[which].propagate(sr, x, frontier)
 
+    def _jit(self, fn, version: Optional[int] = None, **jit_kw):
+        """``jax.jit`` with compile accounting: the wrapped body runs
+        exactly once per trace/compile (never per dispatch), bumping
+        ``stats.jit_compiles`` and the per-version ``compile_counts``.
+        Shared arg-carried entries pass ``version=None`` and charge the
+        version being dispatched (``_dispatch_version``); per-edition
+        closures charge their own version.  This is the counter the
+        mutation bench and CI's zero-recompile assertion read."""
+
+        def counted(*args):
+            self.stats.jit_compiles += 1
+            v = self._dispatch_version if version is None else version
+            self.compile_counts[v] = self.compile_counts.get(v, 0) + 1
+            return fn(*args)
+
+        return jax.jit(counted, **jit_kw)
+
     def _build(self, example_query):
         """Version-agnostic scaffolding: the slot table, protos, extraction
         and diagnostics.  Everything that captures graph arrays as jit
@@ -449,7 +553,7 @@ class QuegelEngine(SlotProgram):
             q = jax.tree.map(lambda tab: tab[idx], slots["query"])
             return prog.extract(st, q)
 
-        self._extract = jax.jit(extract)
+        self._extract = self._jit(extract, version=int(g.version))
 
         if self.legacy:
             # resume restoration is a pure scatter of host-collected state
@@ -468,7 +572,9 @@ class QuegelEngine(SlotProgram):
                 slots["done"] = slots["done"].at[idx].set(False)
                 return slots
 
-            self._legacy_admit_resume = jax.jit(admit_resume)
+            self._legacy_admit_resume = self._jit(
+                admit_resume, version=int(g.version)
+            )
         else:
 
             def extract_all(slots):
@@ -476,7 +582,7 @@ class QuegelEngine(SlotProgram):
 
             # one dispatch extracts every slot; run_round slices the rows
             # of finished queries host-side (results are small Q-data).
-            self._extract_all = jax.jit(extract_all)
+            self._extract_all = self._jit(extract_all, version=int(g.version))
 
         # per-round frontier occupancy (opt-in diagnostics): live slots'
         # active-vertex count, summed over the program's frontier leaves.
@@ -493,7 +599,9 @@ class QuegelEngine(SlotProgram):
 
                 return jax.vmap(one)(slots["state"], slots["live"]).sum()
 
-            self._frontier_count = jax.jit(frontier_count)
+            self._frontier_count = self._jit(
+                frontier_count, version=int(g.version)
+            )
 
         # Graph versioning (DESIGN.md §12): _slot_version pins each slot to
         # the version it was admitted under; _resume_refs pins editions
@@ -510,24 +618,22 @@ class QuegelEngine(SlotProgram):
         self._editions[ed.version] = ed
         self._current_version = ed.version
 
-    def _make_edition(self, graph, index, aux, backends) -> _Edition:
-        """Compile every round-path closure against ONE graph version.
+    def _round_machinery(self, g, index) -> dict:
+        """The round-path closures, parametrized by the graph/index they
+        close over.
 
-        All closures capture the LOCAL ``graph``/``index``/``backends``
-        (never ``self.graph``) so an installed edition keeps answering on
-        its own snapshot while ``self.*`` moves on to the next version.
-        Every entry point takes a per-version ``vmask``: the dispatch
-        advances only the slots pinned to this version, leaving other
-        versions' live/done/step rows untouched — ``slot_round`` dispatches
-        once per version present in the slot table, so mixed-version rounds
-        still pay one device->host sync total.
+        Constant-closure mode traces them with concrete arrays — one
+        compile per edition, graph data folded in.  Argument-carried mode
+        calls this INSIDE the shared round's trace with the traced
+        carrier's graph/index (same shapes every edition), so ONE compile
+        serves every version (DESIGN.md §12 addendum).  Every entry point
+        takes a per-version ``vmask``: the dispatch advances only the
+        slots pinned to this version, leaving other versions'
+        live/done/step rows untouched — ``slot_round`` dispatches once per
+        version present in the slot table, so mixed-version rounds still
+        pay one device->host sync total.
         """
-        g, prog, C = graph, self.program, self.capacity
-        ed = _Edition(version=int(graph.version), graph=graph, index=index,
-                      aux=dict(aux), backends=dict(backends))
-
-        def propagate(sr, x, frontier=None, which="default"):
-            return backends[which].propagate(sr, x, frontier)
+        prog = self.program
 
         def admit(slots, idx, query):
             st = prog.init(g, query, index)
@@ -653,6 +759,32 @@ class QuegelEngine(SlotProgram):
 
             return round_k
 
+        return dict(
+            admit=admit, admit_batch=admit_batch,
+            admit_batch_resume=admit_batch_resume,
+            make_super_round=make_super_round, zero_done=zero_done,
+            make_round_k=make_round_k,
+        )
+
+    def _make_edition(self, graph, index, aux, backends) -> _Edition:
+        """Build one graph version's round entry points.
+
+        All closures capture the LOCAL ``graph``/``index``/``backends``
+        (never ``self.graph``) so an installed edition keeps answering on
+        its own snapshot while ``self.*`` moves on to the next version.
+        Constant-closure mode compiles fresh jits per edition;
+        argument-carried mode binds the shared jitted entries and packs
+        this version's arrays into ``ed.round_args`` instead.
+        """
+        g, C = graph, self.capacity
+        ed = _Edition(version=int(graph.version), graph=graph, index=index,
+                      aux=dict(aux), backends=dict(backends))
+
+        def propagate(sr, x, frontier=None, which="default"):
+            return backends[which].propagate(sr, x, frontier)
+
+        m = self._round_machinery(g, index)
+
         # Discovery pass (per edition): abstractly trace ONE round with a
         # shape-preserving recording propagate.  This (a) learns every
         # (view, semiring) the program propagates so tile backends can
@@ -670,7 +802,7 @@ class QuegelEngine(SlotProgram):
             return x
 
         jax.eval_shape(
-            make_round_k(recording), self._slots, jnp.zeros((C,), bool)
+            m["make_round_k"](recording), self._slots, jnp.zeros((C,), bool)
         )
         for which, sr, _, _ in self._prop_trace:
             warm = getattr(backends[which], "table_for", None)
@@ -678,36 +810,148 @@ class QuegelEngine(SlotProgram):
                 warm(sr)
 
         if self.legacy:
-            ed.admit = jax.jit(admit)
-            legacy_round = make_super_round(propagate)
-            ed.super_round = jax.jit(
-                lambda s, vmask: legacy_round(zero_done(s, vmask), vmask)
+            ed.admit = self._jit(m["admit"], version=ed.version)
+            legacy_round = m["make_super_round"](propagate)
+            zero_done = m["zero_done"]
+            ed.super_round = self._jit(
+                lambda s, vmask: legacy_round(zero_done(s, vmask), vmask),
+                version=ed.version,
             )
         elif self.mesh is not None:
-            self._build_spmd_edition(
-                ed, make_round_k, admit_batch, admit_batch_resume
-            )
+            if self._arg_carried:
+                self._bind_spmd_arg_carried(ed)
+            else:
+                self._build_spmd_edition(
+                    ed, m["make_round_k"], m["admit_batch"],
+                    m["admit_batch_resume"],
+                )
+        elif self._arg_carried:
+            self._bind_arg_carried(ed)
         else:
-            round_k = make_round_k(propagate)
+            round_k = m["make_round_k"](propagate)
+            admit_batch = m["admit_batch"]
+            admit_batch_resume = m["admit_batch_resume"]
             # Donating the slot table lets XLA alias every (C, V, ...) slab
             # output to its input: the hot loop mutates in place, no copy.
             dn = (0,) if self.donate else ()
-            ed.round = jax.jit(round_k, donate_argnums=dn)
-            ed.round_admit = jax.jit(
+            ed.round = self._jit(round_k, version=ed.version,
+                                 donate_argnums=dn)
+            ed.round_admit = self._jit(
                 lambda slots, admit_mask, queries, vmask: round_k(
                     admit_batch(slots, admit_mask, queries), vmask
                 ),
-                donate_argnums=dn,
+                version=ed.version, donate_argnums=dn,
             )
             # separate entry so rounds with no resuming query keep the
             # no-resume hot path (and its compiled trace) untouched
-            ed.round_resume = jax.jit(
+            ed.round_resume = self._jit(
                 lambda slots, am, q, rm, rst, rsp, vmask: round_k(
                     admit_batch_resume(slots, am, q, rm, rst, rsp), vmask
                 ),
-                donate_argnums=dn,
+                version=ed.version, donate_argnums=dn,
             )
         return ed
+
+    # ------------------------------------------- argument-carried editions
+    def _make_carrier(self, ed: _Edition) -> dict:
+        """This edition's arrays as the traced ``carrier`` argument.
+
+        Per view: the graph is capacity-padded (``Graph.with_capacity``) to
+        the engine's per-view cap and lineage-stripped (``Graph.carrier``);
+        backend arrays come from ``as_args`` (tile tables slot-padded to
+        the per-view slot cap).  Caps only grow — an overflowing edition
+        raises its view's cap (new shapes, one real recompile) and every
+        later in-capacity edition reuses that compile.
+        """
+        from repro.core.graph import grow_capacity
+
+        graphs = {"default": ed.graph, **ed.aux}
+        views: dict = {}
+        g_default = None
+        for name, be in ed.backends.items():
+            g_v = graphs[name]
+            cap = self._view_caps.get(name)
+            if cap is None:
+                # an explicit edge_capacity= is taken at face value (tests
+                # and benches use it to provoke overflow); otherwise grow
+                # with headroom so typical delta streams never overflow
+                cap = (self._edge_capacity
+                       if self._edge_capacity is not None
+                       else grow_capacity(g_v.num_edges))
+                cap = max(cap, g_v.num_edges)
+                self._view_caps[name] = cap
+            elif g_v.num_edges > cap:
+                cap = grow_capacity(g_v.num_edges)
+                self._view_caps[name] = cap
+            gcar = g_v.with_capacity(max_e=cap).carrier()
+            scap = None
+            if isinstance(be, ops._TileBackend):
+                need = max(
+                    (bs.max_bpr for bs in be.tables.values()), default=1
+                )
+                scap = self._slot_caps.get(name)
+                if scap is None or need > scap:
+                    scap = need + 2
+                    self._slot_caps[name] = scap
+            views[name] = be.as_args(gcar, slot_cap=scap)
+            if name == "default":
+                g_default = gcar
+        return {"graph": g_default, "index": ed.index, "views": views}
+
+    def _ensure_arg_carried_entries(self) -> None:
+        """Build the ONE shared set of jitted round entries (single-device
+        arg-carried mode).  Unlike constant-closure editions these take the
+        carrier as a traced argument: a later edition with the same array
+        shapes (in-capacity delta) dispatches through the same compiled
+        executable — zero recompiles, asserted by the mutation bench."""
+        if self._ac_entries is not None:
+            return
+        # plan-parameter templates (gate, gather_edges, block, ...): taken
+        # from the FIRST edition's backends and never replaced — from_args
+        # rebinds them to each carrier's arrays inside the trace.
+        self._ac_protos = dict(self._backends)
+
+        def machinery_of(carrier):
+            protos = self._ac_protos
+            bes = {
+                k: protos[k].from_args(v)
+                for k, v in carrier["views"].items()
+            }
+
+            def prop(sr, x, frontier=None, which="default"):
+                return bes[which].propagate(sr, x, frontier)
+
+            return self._round_machinery(
+                carrier["graph"], carrier["index"]
+            ), prop
+
+        def round_ac(slots, vmask, carrier):
+            m, p = machinery_of(carrier)
+            return m["make_round_k"](p)(slots, vmask)
+
+        def round_admit_ac(slots, admit_mask, queries, vmask, carrier):
+            m, p = machinery_of(carrier)
+            return m["make_round_k"](p)(
+                m["admit_batch"](slots, admit_mask, queries), vmask
+            )
+
+        def round_resume_ac(slots, am, q, rm, rst, rsp, vmask, carrier):
+            m, p = machinery_of(carrier)
+            return m["make_round_k"](p)(
+                m["admit_batch_resume"](slots, am, q, rm, rst, rsp), vmask
+            )
+
+        dn = (0,) if self.donate else ()
+        self._ac_entries = (
+            self._jit(round_ac, donate_argnums=dn),
+            self._jit(round_admit_ac, donate_argnums=dn),
+            self._jit(round_resume_ac, donate_argnums=dn),
+        )
+
+    def _bind_arg_carried(self, ed: _Edition) -> None:
+        self._ensure_arg_carried_entries()
+        ed.round, ed.round_admit, ed.round_resume = self._ac_entries
+        ed.round_args = (self._make_carrier(ed),)
 
     # ---------------------------------------------------------------- SPMD
     def _build_spmd_edition(self, ed: _Edition, make_round_k, admit_batch,
@@ -802,31 +1046,31 @@ class QuegelEngine(SlotProgram):
             lambda leaf: P(*([None] * jnp.ndim(leaf))), self._slots["state"]
         )
         dn = (0,) if self.donate else ()
-        ed.round = jax.jit(
+        ed.round = self._jit(
             _shard_map(
                 body_round, mesh,
                 in_specs=(slot_specs, P(None), edge_specs),
                 out_specs=slot_specs,
             ),
-            donate_argnums=dn,
+            version=ed.version, donate_argnums=dn,
         )
-        ed.round_admit = jax.jit(
+        ed.round_admit = self._jit(
             _shard_map(
                 body_admit, mesh,
                 in_specs=(slot_specs, P(None), query_specs, P(None),
                           edge_specs),
                 out_specs=slot_specs,
             ),
-            donate_argnums=dn,
+            version=ed.version, donate_argnums=dn,
         )
-        ed.round_resume = jax.jit(
+        ed.round_resume = self._jit(
             _shard_map(
                 body_resume, mesh,
                 in_specs=(slot_specs, P(None), query_specs, P(None),
                           state_specs, P(None), P(None), edge_specs),
                 out_specs=slot_specs,
             ),
-            donate_argnums=dn,
+            version=ed.version, donate_argnums=dn,
         )
 
         # Place the slot table (once — editions share it) and this
@@ -863,6 +1107,206 @@ class QuegelEngine(SlotProgram):
             state_gather_payload_bytes=state_bytes,
         )
 
+    # ------------------------------------------ SPMD + argument-carried
+    def _make_spmd_carrier(self, ed: _Edition) -> dict:
+        """The SPMD round's replicated carrier: capacity-padded default
+        graph (feeds ``prog.init`` / ``StepCtx``) plus the index.  Edge
+        work never reads it — that rides in the mesh-sharded partition
+        arrays, passed alongside so they keep their own shardings."""
+        from repro.core.graph import grow_capacity
+
+        ne = ed.graph.num_edges
+        cap = self._view_caps.get("default")
+        if cap is None:
+            cap = (self._edge_capacity
+                   if self._edge_capacity is not None
+                   else grow_capacity(ne))
+            cap = max(cap, ne)
+            self._view_caps["default"] = cap
+        elif ne > cap:
+            cap = grow_capacity(ne)
+            self._view_caps["default"] = cap
+        return {
+            "graph": ed.graph.with_capacity(max_e=cap).carrier(),
+            "index": ed.index,
+        }
+
+    def _ensure_spmd_ac_entries(self, ed0: _Edition) -> None:
+        """Shared shard_map round entries taking ``(..., parts, carrier)``
+        as traced arguments — the SPMD analogue of
+        ``_ensure_arg_carried_entries``.  Partition arrays shard along the
+        mesh axis (``ShardedGraph.apply_delta`` keeps Emax, so in-capacity
+        deltas keep their shapes); the carrier replicates.  Built once,
+        from the FIRST edition; every later edition re-binds arrays only.
+        """
+        if self._spmd_ac is not None:
+            return
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.core.distributed import _shard_map
+
+        g, C = ed0.graph, self.capacity
+        mesh, axis, nparts = self.mesh, self._mesh_axis, self._n_parts
+        # statics-only templates: make_local closes over block/n/partition,
+        # never over a specific edition's arrays
+        self._ac_protos = dict(ed0.backends)
+        protos = self._ac_protos
+
+        def is_vq(leaf):
+            return jnp.ndim(leaf) >= 2 and jnp.shape(leaf)[-1] == g.n
+
+        def spec_of(leaf):
+            nd = jnp.ndim(leaf)
+            if is_vq(leaf):
+                return P(*([None] * (nd - 1) + [axis]))
+            return P(*([None] * nd))
+
+        is_p = lambda x: isinstance(x, P)
+        shard_tree = jax.tree.map(is_vq, self._slots)
+        slot_specs = jax.tree.map(spec_of, self._slots)
+        query_specs = jax.tree.map(
+            lambda leaf: P(*([None] * jnp.ndim(leaf))), self._slots["query"]
+        )
+        state_specs = jax.tree.map(
+            lambda leaf: P(*([None] * jnp.ndim(leaf))), self._slots["state"]
+        )
+        edge_parts0 = {k: be.parts for k, be in ed0.backends.items()}
+        edge_specs = {
+            k: jax.tree.map(lambda _: P(axis, None), v)
+            for k, v in edge_parts0.items()
+        }
+        carrier0 = self._make_spmd_carrier(ed0)
+        carrier_specs = jax.tree.map(
+            lambda leaf: P(*([None] * jnp.ndim(leaf))), carrier0
+        )
+
+        def gather(slots):
+            def f(x, s):
+                if not s:
+                    return x
+                return jax.lax.all_gather(
+                    x, axis, axis=jnp.ndim(x) - 1, tiled=True
+                )
+
+            return jax.tree.map(f, slots, shard_tree)
+
+        def scatter(slots):
+            i = jax.lax.axis_index(axis)
+
+            def f(x, s):
+                if not s:
+                    return x
+                blk = x.shape[-1] // nparts
+                return jax.lax.dynamic_slice_in_dim(
+                    x, i * blk, blk, jnp.ndim(x) - 1
+                )
+
+            return jax.tree.map(f, slots, shard_tree)
+
+        def local_prop(parts):
+            fns = {k: protos[k].make_local(parts[k]) for k in parts}
+
+            def prop(sr, x, frontier=None, which="default"):
+                return fns[which](sr, x, frontier)
+
+            return prop
+
+        def body_round(slots, vmask, parts, carrier):
+            m = self._round_machinery(carrier["graph"], carrier["index"])
+            rk = m["make_round_k"](local_prop(parts))
+            return scatter(rk(gather(slots), vmask))
+
+        def body_admit(slots, admit_mask, queries, vmask, parts, carrier):
+            m = self._round_machinery(carrier["graph"], carrier["index"])
+            rk = m["make_round_k"](local_prop(parts))
+            return scatter(rk(
+                m["admit_batch"](gather(slots), admit_mask, queries), vmask
+            ))
+
+        def body_resume(slots, admit_mask, queries, resume_mask, rstate,
+                        rsteps, vmask, parts, carrier):
+            m = self._round_machinery(carrier["graph"], carrier["index"])
+            rk = m["make_round_k"](local_prop(parts))
+            return scatter(rk(m["admit_batch_resume"](
+                gather(slots), admit_mask, queries, resume_mask, rstate,
+                rsteps), vmask))
+
+        dn = (0,) if self.donate else ()
+        entries = (
+            self._jit(
+                _shard_map(
+                    body_round, mesh,
+                    in_specs=(slot_specs, P(None), edge_specs,
+                              carrier_specs),
+                    out_specs=slot_specs,
+                ),
+                donate_argnums=dn,
+            ),
+            self._jit(
+                _shard_map(
+                    body_admit, mesh,
+                    in_specs=(slot_specs, P(None), query_specs, P(None),
+                              edge_specs, carrier_specs),
+                    out_specs=slot_specs,
+                ),
+                donate_argnums=dn,
+            ),
+            self._jit(
+                _shard_map(
+                    body_resume, mesh,
+                    in_specs=(slot_specs, P(None), query_specs, P(None),
+                              state_specs, P(None), P(None), edge_specs,
+                              carrier_specs),
+                    out_specs=slot_specs,
+                ),
+                donate_argnums=dn,
+            ),
+        )
+        to_shardings = lambda specs: jax.tree.map(
+            lambda s: NamedSharding(mesh, s), specs, is_leaf=is_p
+        )
+        self._spmd_ac = dict(
+            entries=entries,
+            slot_shardings=to_shardings(slot_specs),
+            edge_shardings=to_shardings(edge_specs),
+            carrier_shardings=to_shardings(carrier_specs),
+        )
+
+        # same collective model as the constant-closure SPMD build
+        prop_bytes = sum(
+            int(np.prod(shape)) * dt.itemsize
+            for _, _, shape, dt in self._prop_trace
+        )
+        state_bytes = sum(
+            int(np.prod(np.shape(leaf))) * np.dtype(leaf.dtype).itemsize
+            for leaf, s in zip(
+                jax.tree.leaves(self._slots), jax.tree.leaves(shard_tree)
+            )
+            if s
+        )
+        self._collective_model = dict(
+            propagate_calls_per_superstep=len(self._prop_trace),
+            propagate_payload_bytes_per_superstep=prop_bytes * C,
+            state_gather_payload_bytes=state_bytes,
+        )
+
+    def _bind_spmd_arg_carried(self, ed: _Edition) -> None:
+        self._ensure_spmd_ac_entries(ed)
+        ac = self._spmd_ac
+        ed.round, ed.round_admit, ed.round_resume = ac["entries"]
+        if not self._slots_placed:
+            self._slots = jax.device_put(self._slots, ac["slot_shardings"])
+            self._slots_placed = True
+        # pre-place this edition's arrays in the round's layout so no
+        # per-call resharding (and so jit's sharding cache key is stable)
+        edge_parts = {k: be.parts for k, be in ed.backends.items()}
+        edge_parts = jax.device_put(edge_parts, ac["edge_shardings"])
+        carrier = jax.device_put(
+            self._make_spmd_carrier(ed), ac["carrier_shardings"]
+        )
+        ed.round_args = (edge_parts, carrier)
+        self._edge_parts = edge_parts
+
     def collective_bytes_per_round(self) -> Optional[dict]:
         """Modeled per-device wire bytes for one SPMD super-round
         (DESIGN.md §6); None outside mesh mode.
@@ -888,6 +1332,64 @@ class QuegelEngine(SlotProgram):
             propagate_bytes_per_superstep=per_step,
             round_total_bytes=state + self.steps_per_round * per_step,
         )
+
+    # ------------------------------------------------- background warmup
+    def _spawn_warmup(self, ed: _Edition) -> None:
+        """Compile a fresh constant-closure edition's round entries on a
+        daemon thread while the PREVIOUS edition keeps serving — so
+        ``apply_delta`` returns in splice time, not compile time
+        (DESIGN.md §12 addendum).  No swap step is needed: mixed-version
+        dispatch already routes each slot through its pinned edition, so
+        the new version's first real dispatch simply finds the jit cache
+        hot.  Races are benign — if a dispatch beats the warm thread, jax
+        compiles under its own lock and one of the two calls hits cache.
+        """
+        self.stats.warmups += 1
+        t = threading.Thread(
+            target=self._warm_edition, args=(ed,),
+            name=f"edition-warmup-v{ed.version}", daemon=True,
+        )
+        self._warm_threads.append(t)
+        t.start()
+
+    def _warm_edition(self, ed: _Edition) -> None:
+        """CALL each entry with all-False masks (advancing nothing): only
+        a real call installs the executable for the real argument shapes
+        (an ahead-of-time ``.lower().compile()`` would not populate the
+        jit dispatch cache).  Proto-filled rows give the exact
+        query/state dtypes the serving path stacks."""
+        C = self.capacity
+        zmask = np.zeros((C,), bool)
+        queries = jax.tree.map(
+            lambda x: np.stack([x] * C), self._proto_q_np
+        )
+        rstate = jax.tree.map(
+            lambda x: np.stack([x] * C), self._proto_state_np
+        )
+        rsteps = np.zeros((C,), np.int32)
+
+        def slots():
+            # donation would consume the live table's buffers — warm on
+            # throwaway copies when the round donates its first argument
+            if self.donate:
+                return jax.tree.map(jnp.array, self._slots)
+            return self._slots
+
+        try:
+            ed.round(slots(), zmask, *ed.round_args)
+            ed.round_admit(slots(), zmask, queries, zmask, *ed.round_args)
+            ed.round_resume(slots(), zmask, queries, zmask, rstate, rsteps,
+                            zmask, *ed.round_args)
+        except Exception:  # pragma: no cover - lazy compile is the fallback
+            pass
+
+    def wait_warmup(self, timeout: Optional[float] = None) -> bool:
+        """Join outstanding warmup threads (tests/benchmarks sync point);
+        True when none remain running."""
+        for t in list(self._warm_threads):
+            t.join(timeout)
+        self._warm_threads = [t for t in self._warm_threads if t.is_alive()]
+        return not self._warm_threads
 
     # ------------------------------------------- SlotProgram (device side)
     def slot_round(self, admitted: dict[int, Any]) -> RoundOutcome:
@@ -952,6 +1454,7 @@ class QuegelEngine(SlotProgram):
                 )
             _ = np.asarray(self._slots["live"]).any()
             for v in versions:
+                self._dispatch_version = v
                 vmask = (self._slot_version == v) & live
                 self._slots = self._editions[v].super_round(
                     self._slots, vmask
@@ -959,6 +1462,9 @@ class QuegelEngine(SlotProgram):
         else:
             for v in versions:
                 ed = self._editions[v]
+                # shared arg-carried entries charge compiles to the version
+                # being dispatched (see _jit)
+                self._dispatch_version = v
                 vmask = (self._slot_version == v) & live
                 vfresh = fresh if v == cur else {}
                 vres = {s: r for s, r in resumes.items() if r[3] == v}
@@ -1224,13 +1730,16 @@ class QuegelEngine(SlotProgram):
         # later insert an old-version entry — harmless: submit-time keys
         # carry the current prefix, so it is unreachable unless the content
         # genuinely reverts, in which case serving it is byte-identical.)
+        # Entries are bucketed by prefix, so this drops whole buckets
+        # instead of sweeping every key per mutation.
         invalidated = 0
         if rt.cache is not None:
-            tok = new_hash + ":"
-            invalidated = rt.cache.invalidate(
-                lambda k: not str(k).startswith(tok)
-            )
+            t0 = time.perf_counter()
+            invalidated = rt.cache.invalidate_except(new_hash)
             rt.stats.cache_invalidations += invalidated
+            rt.stats.cache_invalidation_ms += (time.perf_counter() - t0) * 1e3
+        if self.warmup and not self._arg_carried and not self.legacy:
+            self._spawn_warmup(ed)
         if prune:
             self._prune_editions()
         return dict(

@@ -147,10 +147,31 @@ class Graph:
     parent_hash: Optional[str] = dataclasses.field(
         default=None, metadata=dict(static=True)
     )
+    # Edge-capacity padding (DESIGN.md §12 addendum): when ``nnz`` is set the
+    # COO/CSR arrays are padded out to a fixed capacity with inert rows
+    # (src = dst = n, w = 0 — the segment scatter drops index n, so padding
+    # contributes nothing on any semiring) and ``nnz`` holds the logical edge
+    # count.  An in-capacity ``apply_delta`` then changes array *values*
+    # only, never shapes, which is what lets the argument-carried round
+    # reuse one compiled executable across graph versions.
+    nnz: Optional[jnp.ndarray] = None  # () int32 — logical edge count
 
     @property
     def num_edges(self) -> int:
+        if self.nnz is not None:
+            return int(self.nnz)
         return int(self.src.shape[0])
+
+    @property
+    def edge_capacity(self) -> int:
+        """Physical edge-array length (== num_edges unless capacity-padded)."""
+        return int(self.src.shape[0])
+
+    def _edges_np(self):
+        """The logical COO edges as numpy (capacity padding trimmed off)."""
+        ne = self.num_edges
+        return (np.asarray(self.src)[:ne], np.asarray(self.dst)[:ne],
+                np.asarray(self.w)[:ne])
 
     def content_hash(self) -> str:
         """Stable sha256 over the logical graph (sizes + COO edges +
@@ -167,14 +188,103 @@ class Graph:
             return memo
         import hashlib
 
-        h = hashlib.sha256(f"{self.n}/{self.n_real}".encode())
+        ne = self.num_edges  # hash the logical prefix: capacity padding is
+        h = hashlib.sha256(f"{self.n}/{self.n_real}".encode())  # not content
         for arr in (self.src, self.dst, self.w):
-            a = np.asarray(arr)
+            a = np.asarray(arr)[:ne]
             h.update(str(a.dtype).encode())
             h.update(a.tobytes())
         digest = h.hexdigest()
         object.__setattr__(self, "_chash", digest)
         return digest
+
+    # ----------------------------------------------------- capacity padding
+    def with_capacity(self, max_e: Optional[int] = None, *,
+                      max_v: Optional[int] = None) -> "Graph":
+        """Pad the edge arrays to a fixed capacity (and optionally repad the
+        vertex axis to ``max_v``), returning a shape-stable Graph.
+
+        Padding rows are inert on every propagation path: COO padding holds
+        ``src = dst = n, w = 0`` (appended at the tail, preserving the
+        dst-sorted invariant; the segment scatter drops destination index
+        ``n``), CSR padding holds ``csr_src = csr_dst = n, csr_w = 0``
+        (preserving the (src, dst)-lex sort; the gated gather's clamped read
+        may mark a padding edge active but its message lands in the dummy
+        segment ``n`` and is sliced off).  ``content_hash`` and lineage are
+        unchanged — capacity is a *representation* choice, not content.
+
+        ``max_v`` rebuilds the graph with vertex padding (a different padded
+        graph, like :meth:`padded` — use before building indexes/tables).
+        Capacity overflow on :meth:`apply_delta` grows the arrays (new
+        shapes → the arg-carried round recompiles, by design).
+        """
+        g = self
+        if max_v is not None:
+            if max_v < g.n_real:
+                raise ValueError(f"max_v {max_v} < n_real {g.n_real}")
+            if max_v > g.n:
+                s, d, w = g._edges_np()
+                g2 = Graph.from_edges(s, d, g.n_real, w=w, pad_to=max_v,
+                                      weight_dtype=w.dtype)
+                g = dataclasses.replace(
+                    g2, version=g.version, parent_hash=g.parent_hash
+                )
+        ne = g.num_edges
+        cap = max(int(max_e) if max_e is not None else 0, ne)
+        if g.nnz is not None and g.edge_capacity == cap:
+            return g
+        base = g.trimmed()
+        if base.csr_row is None:
+            raise ValueError(
+                "with_capacity needs the CSR view; build via Graph.from_edges"
+            )
+        n, pad = base.n, cap - ne
+
+        def padc(a, fill):
+            a = np.asarray(a)
+            return jnp.asarray(
+                np.concatenate([a, np.full(pad, fill, dtype=a.dtype)])
+            )
+
+        out = dataclasses.replace(
+            base,
+            src=padc(base.src, n), dst=padc(base.dst, n), w=padc(base.w, 0),
+            csr_src=padc(base.csr_src, n), csr_dst=padc(base.csr_dst, n),
+            csr_w=padc(base.csr_w, 0),
+            nnz=jnp.asarray(ne, dtype=jnp.int32),
+        )
+        memo = getattr(base, "_chash", None)
+        if memo is not None:
+            object.__setattr__(out, "_chash", memo)
+        return out
+
+    def trimmed(self) -> "Graph":
+        """The exact (capacity-free) graph: the logical prefix of every edge
+        array.  Identity when not capacity-padded."""
+        if self.nnz is None:
+            return self
+        ne = int(self.nnz)
+        sl = lambda a: None if a is None else a[:ne]
+        out = dataclasses.replace(
+            self, src=self.src[:ne], dst=self.dst[:ne], w=self.w[:ne],
+            csr_src=sl(self.csr_src), csr_dst=sl(self.csr_dst),
+            csr_w=sl(self.csr_w), nnz=None,
+        )
+        memo = getattr(self, "_chash", None)
+        if memo is not None:
+            object.__setattr__(out, "_chash", memo)
+        return out
+
+    def carrier(self) -> "Graph":
+        """A lineage-stripped copy for use as a *traced jit argument*.
+
+        ``version``/``parent_hash`` are static fields — part of the jit
+        cache key — so the argument-carried round pins them to ``(0, None)``;
+        host-side bookkeeping keeps the exact graph with real lineage.
+        """
+        if self.version == 0 and self.parent_hash is None:
+            return self
+        return dataclasses.replace(self, version=0, parent_hash=None)
 
     # ---------------------------------------------------------------- build
     @staticmethod
@@ -223,10 +333,10 @@ class Graph:
         """
         if self.n % multiple == 0:
             return self
-        w = np.asarray(self.w)
+        s, d, w = self._edges_np()
         return Graph.from_edges(
-            np.asarray(self.src),
-            np.asarray(self.dst),
+            s,
+            d,
             self.n_real,
             w=w,
             pad_to=_pad_to(self.n, multiple),
@@ -234,10 +344,10 @@ class Graph:
         )
 
     def reverse(self) -> "Graph":
-        w = np.asarray(self.w)
+        s, d, w = self._edges_np()
         return Graph.from_edges(
-            np.asarray(self.dst),
-            np.asarray(self.src),
+            d,
+            s,
             self.n_real,
             w=w,
             pad_to=self.n,
@@ -245,9 +355,7 @@ class Graph:
         )
 
     def undirected(self) -> "Graph":
-        s = np.asarray(self.src)
-        d = np.asarray(self.dst)
-        w = np.asarray(self.w)
+        s, d, w = self._edges_np()
         return Graph.from_edges(
             np.concatenate([s, d]),
             np.concatenate([d, s]),
@@ -265,9 +373,7 @@ class Graph:
         OR/sum).  Multi-edges keep the *best* weight under min semantics
         (callers with sum semantics must pre-combine duplicates).
         """
-        src = np.asarray(self.src)
-        dst = np.asarray(self.dst)
-        w = np.asarray(self.w)
+        src, dst, w = self._edges_np()
         dtype = dtype or w.dtype
         nb = _pad_to(self.n, block) // block
         sb = src // block
@@ -345,7 +451,8 @@ class Graph:
             _, idx = np.unique(key, return_index=True)
             idx = np.sort(idx)
             d_s, d_d = d_s[idx], d_d[idx]
-            base = np.asarray(self.dst).astype(np.int64) * n + np.asarray(self.src)
+            g_s, g_d, _ = self._edges_np()
+            base = g_d.astype(np.int64) * n + g_s
             missing = ~np.isin(d_d.astype(np.int64) * n + d_s, base)
             if missing.any():
                 bad = [(int(s), int(d)) for s, d in
@@ -373,6 +480,17 @@ class Graph:
             )
             object.__setattr__(g, "_chash", parent)  # content unchanged
             return g
+        if self.nnz is not None:
+            # Capacity-padded: splice the logical prefix, then re-pad.  The
+            # same capacity is kept while the result fits (values-only
+            # change — the arg-carried round's compiled executable is
+            # reused); overflow grows with headroom, changing shapes and
+            # forcing the one recompile that genuinely cannot be avoided.
+            cap = self.edge_capacity
+            out = self.trimmed().apply_delta(delta)
+            if out.num_edges > cap:
+                cap = grow_capacity(out.num_edges)
+            return out.with_capacity(max_e=cap)
         if self.csr_row is None:
             raise ValueError(
                 "apply_delta needs the CSR view; build the graph via "
@@ -496,6 +614,39 @@ class Graph:
             block=block,
             nslots=jnp.asarray(nslots),
         )
+
+
+def grow_capacity(ne: int) -> int:
+    """Default edge-capacity headroom: ~25% + slack, rounded to 64."""
+    return _pad_to(int(ne * 1.25) + 32, 64)
+
+
+def pad_block_slots(bs: BlockSparse, slot_cap: int, add_id) -> BlockSparse:
+    """Pad a BlockSparse table's slot axis out to ``slot_cap`` source-block
+    slots per destination row, keeping tile shapes stable across mutations
+    for the argument-carried round.
+
+    Padding slots point at source block 0 with add-identity tiles and
+    ``nslots`` is unchanged, so gated kernels skip them outright and the
+    ungated tile math treats them as no-ops (identity tiles contribute
+    ``add_id``, which every semiring's combine ignores).
+    """
+    if bs.max_bpr > slot_cap:
+        raise ValueError(
+            f"slot_cap {slot_cap} < table max_bpr {bs.max_bpr}"
+        )
+    if bs.max_bpr == slot_cap:
+        return bs
+    pad = slot_cap - bs.max_bpr
+    src_ids = np.pad(np.asarray(bs.src_ids), ((0, 0), (0, pad)))
+    tiles = np.pad(np.asarray(bs.tiles), ((0, 0), (0, pad), (0, 0), (0, 0)),
+                   constant_values=add_id)
+    return BlockSparse(
+        src_ids=jnp.asarray(src_ids),
+        tiles=jnp.asarray(tiles),
+        block=bs.block,
+        nslots=bs.nslots,
+    )
 
 
 # ------------------------------------------------------------- generators

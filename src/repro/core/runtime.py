@@ -105,8 +105,10 @@ class SlotStats:
     rejected: int = 0
     cache_hits: int = 0
     # cached results dropped because a graph mutation made their version's
-    # entries unreachable (DESIGN.md §12)
+    # entries unreachable (DESIGN.md §12), and the cumulative wall time the
+    # bucketed drop took (proving invalidation is O(dropped), not O(cache))
     cache_invalidations: int = 0
+    cache_invalidation_ms: float = 0.0
     supersteps_total: int = 0
     # preemption (DESIGN.md §9): suspensions, resume re-admissions, and the
     # high-water mark of in-flight queries (live slots + suspended) — the
@@ -342,13 +344,36 @@ _MISS = object()
 
 
 class ResultCache:
-    """LRU of extracted results keyed by canonicalized query hash."""
+    """LRU of extracted results keyed by canonicalized query hash.
+
+    Keys are ``<content-hash>:<query-hash>`` (engines prefix every key
+    with the graph version's content hash, DESIGN.md §12), so alongside
+    the LRU order the cache buckets keys by that prefix.  Version-keyed
+    invalidation after a mutation is then ``invalidate_except``: it pops
+    whole buckets — O(dropped), not O(cache-size) — instead of sweeping
+    every key with a predicate.  Unprefixed keys share the '' bucket.
+    """
 
     def __init__(self, size: int):
         if size < 1:
             raise ValueError("result cache size must be >= 1")
         self.size = int(size)
         self._d: collections.OrderedDict[str, Any] = collections.OrderedDict()
+        self._buckets: dict[str, set] = {}
+
+    @staticmethod
+    def _prefix(key: str) -> str:
+        key = str(key)
+        return key.split(":", 1)[0] if ":" in key else ""
+
+    def _remove(self, key: str) -> None:
+        del self._d[key]
+        p = self._prefix(key)
+        b = self._buckets.get(p)
+        if b is not None:
+            b.discard(key)
+            if not b:
+                del self._buckets[p]
 
     def get(self, key: str):
         if key not in self._d:
@@ -359,18 +384,30 @@ class ResultCache:
     def put(self, key: str, value) -> None:
         self._d[key] = value
         self._d.move_to_end(key)
+        self._buckets.setdefault(self._prefix(key), set()).add(key)
         while len(self._d) > self.size:
-            self._d.popitem(last=False)
+            self._remove(next(iter(self._d)))
 
     def invalidate(self, pred) -> int:
         """Drop every entry whose key satisfies ``pred``; returns the count.
-        Used by version-keyed invalidation after a graph mutation
-        (DESIGN.md §12): entries keyed to any other graph version become
-        unreachable and are evicted in one sweep."""
+        The general (predicate-sweep) form — version invalidation uses
+        ``invalidate_except`` and never pays this O(cache-size) walk."""
         doomed = [k for k in self._d if pred(k)]
         for k in doomed:
-            del self._d[k]
+            self._remove(k)
         return len(doomed)
+
+    def invalidate_except(self, prefix: str) -> int:
+        """Drop every entry whose key prefix differs from ``prefix``;
+        returns the count.  One dict-pop per doomed bucket."""
+        prefix = str(prefix)
+        n = 0
+        for p in [p for p in self._buckets if p != prefix]:
+            keys = self._buckets.pop(p)
+            n += len(keys)
+            for k in keys:
+                del self._d[k]
+        return n
 
     def __len__(self) -> int:
         return len(self._d)

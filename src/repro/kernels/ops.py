@@ -100,6 +100,31 @@ class PropagateBackend:
             f"backend '{self.name}' does not support graph mutation"
         )
 
+    def as_args(self, graph_carrier: Optional[Graph] = None, *,
+                slot_cap: Optional[int] = None):
+        """This plan's prepared arrays as a shape-stable pytree, for the
+        argument-carried round (DESIGN.md §12 addendum).
+
+        The result is passed as a *traced jit argument*; a later edition of
+        the same plan must produce the same treedef and avals so the
+        compiled round is reused.  ``graph_carrier`` is the engine's
+        capacity-padded, lineage-stripped graph; ``slot_cap`` pads tile
+        tables' slot axis.  Plans whose arrays cannot be carried (user
+        callables) refuse — the engine then falls back to constant-closure
+        editions.
+        """
+        raise NotImplementedError(
+            f"backend '{self.name}' cannot be argument-carried"
+        )
+
+    def from_args(self, args) -> "PropagateBackend":
+        """Rebind this plan to the (possibly traced) arrays from
+        :meth:`as_args`.  Called inside the shared round's trace; must not
+        build tables or touch the host."""
+        raise NotImplementedError(
+            f"backend '{self.name}' cannot be argument-carried"
+        )
+
 
 class CooBackend(PropagateBackend):
     """Segment-reduction over the destination-sorted COO view.
@@ -128,6 +153,14 @@ class CooBackend(PropagateBackend):
         # no prepared state beyond the graph views, which apply_delta
         # already merged incrementally
         return CooBackend(graph, gather_edges=self.gather_edges, gate=self.gate)
+
+    def as_args(self, graph_carrier=None, *, slot_cap=None):
+        g = graph_carrier if graph_carrier is not None else self.graph.carrier()
+        return {"graph": g}
+
+    def from_args(self, args):
+        return CooBackend(args["graph"], gather_edges=self.gather_edges,
+                          gate=self.gate)
 
 
 class _TileBackend(PropagateBackend):
@@ -210,6 +243,34 @@ class _TileBackend(PropagateBackend):
         new = copy.copy(self)
         new.graph = graph
         new.tables = tables
+        return new
+
+    def as_args(self, graph_carrier=None, *, slot_cap=None):
+        from repro.core.graph import pad_block_slots
+        from repro.core.semiring import BY_NAME
+
+        if self._shared is not None:
+            raise NotImplementedError(
+                "cannot argument-carry a shared single-table tile backend: "
+                "the table's semiring (add_id) is unknown, so the slot "
+                "padding fill would be a guess"
+            )
+        tables = {}
+        for name, bs in self.tables.items():
+            sr = BY_NAME[name]
+            tables[name] = (pad_block_slots(bs, int(slot_cap), sr.add_id)
+                            if slot_cap else bs)
+        return {"tables": tables}
+
+    def from_args(self, args):
+        import copy
+
+        new = copy.copy(self)
+        new.tables = dict(args["tables"])
+        new._shared = None
+        # an in-trace table miss must fail loudly, never rebuild from the
+        # (host, stale) graph this copy still references
+        new.strict = True
         return new
 
     def propagate(self, sr, x, frontier=None):

@@ -579,3 +579,326 @@ def test_spmd_versioned_parity_pin():
                        capture_output=True, text=True, env=env, timeout=560)
     assert r.returncode == 0, r.stderr[-4000:]
     assert "MUTATION_SPMD_OK" in r.stdout
+
+
+# ================================== compile-once serving (DESIGN.md §12 add.)
+def test_with_capacity_padding_semantics(tail_graph):
+    """Capacity padding is invisible to every consumer of the logical graph:
+    same content hash, same propagation, same delta semantics — only the
+    physical array length (the jit shape key) changes."""
+    g = tail_graph
+    cap = g.num_edges + 16
+    gc = g.with_capacity(max_e=cap)
+    assert gc.edge_capacity == cap and gc.num_edges == g.num_edges
+    assert gc.content_hash() == g.content_hash()
+    assert gc.version == g.version
+    # COO padding: src = dst = n, w = 0 at the tail (dst-sort preserved)
+    s, d, w = np.asarray(gc.src), np.asarray(gc.dst), np.asarray(gc.w)
+    assert (s[g.num_edges:] == g.n).all() and (d[g.num_edges:] == g.n).all()
+    assert (w[g.num_edges:] == 0).all()
+    assert (np.diff(d.astype(np.int64)) >= 0).all()
+    # trimmed() round-trips to the exact graph
+    gt = gc.trimmed()
+    _check_invariants(gt)
+    for f in ("src", "dst", "w", "csr_src", "csr_dst", "csr_w", "csr_row"):
+        np.testing.assert_array_equal(np.asarray(getattr(gt, f)),
+                                      np.asarray(getattr(g, f)))
+    # padding rows are inert under propagation (segment n is sliced off)
+    x = np.where(np.arange(g.n) == 48, 0.0, INF).astype(np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(ref.propagate_coo(gc, MIN_PLUS, jnp.asarray(x))),
+        np.asarray(ref.propagate_coo(g, MIN_PLUS, jnp.asarray(x))))
+    # in-capacity delta: shapes held, values-only change, content parity
+    g1c = gc.apply_delta(adds=[(0, 59)])
+    g1 = g.apply_delta(adds=[(0, 59)])
+    assert g1c.edge_capacity == cap and g1c.num_edges == g.num_edges + 1
+    assert g1c.content_hash() == g1.content_hash()
+    _check_invariants(g1c.trimmed())
+    # overflow: capacity grows (shape change = the one honest recompile)
+    big = [(int(i % 48), int((i * 7 + 3) % 48)) for i in range(1, 48)]
+    big = [(a, b) for a, b in big if a != b]
+    g2c = g1c.apply_delta(adds=big)
+    assert g2c.edge_capacity > cap
+    assert g2c.content_hash() == g1.apply_delta(adds=big).content_hash()
+    # carrier() strips lineage statics so jit treedefs match across versions
+    import jax
+    assert (jax.tree.structure(g1c.carrier())
+            == jax.tree.structure(gc.carrier()))
+
+
+def test_arg_carried_zero_recompiles(tail_graph):
+    """The acceptance pin for arg-carried mode: ten in-capacity mutations,
+    ZERO new compiles, every answer equal to a fresh engine at that
+    version."""
+    g = tail_graph
+    rng = np.random.default_rng(3)
+    eng = make_bfs_engine(g, capacity=3, arg_carried=True,
+                          edge_capacity=g.num_edges + 20)
+    ceng = make_bfs_engine(g, capacity=3)  # constant-closure shadow
+    qid = eng.submit(jnp.asarray([48, 59], jnp.int32))
+    cqid = ceng.submit(jnp.asarray([48, 59], jnp.int32))
+    _assert_res_equal(eng.run_until_drained()[qid],
+                      ceng.run_until_drained()[cqid])
+    base = dict(eng.compile_counts)
+    assert sum(base.values()) == eng.stats.jit_compiles > 0
+    for i in range(10):
+        a, b = (int(v) for v in rng.integers(0, 48, 2))
+        if a == b:
+            b = (a + 1) % 48
+        eng.apply_delta(adds=[(a, b)])
+        ceng.apply_delta(adds=[(a, b)])
+        qid = eng.submit(jnp.asarray([48, 59], jnp.int32))
+        cqid = ceng.submit(jnp.asarray([48, 59], jnp.int32))
+        _assert_res_equal(eng.run_until_drained()[qid],
+                          ceng.run_until_drained()[cqid])
+    assert dict(eng.compile_counts) == base, "arg-carried mode recompiled"
+    assert eng.stats.jit_compiles == sum(base.values())
+
+    # capacity overflow falls back to ONE honest recompile, still correct:
+    # 40 edges guaranteed absent (core edges live in [0,48)^2, the tail
+    # path's sources are >= 48), well past the 20-edge headroom
+    big = [(i, 49 + (i % 10)) for i in range(40)]
+    eng.apply_delta(adds=big)
+    ceng.apply_delta(adds=big)
+    qid = eng.submit(jnp.asarray([48, 59], jnp.int32))
+    cqid = ceng.submit(jnp.asarray([48, 59], jnp.int32))
+    _assert_res_equal(eng.run_until_drained()[qid],
+                      ceng.run_until_drained()[cqid])
+    grown = {v: c for v, c in eng.compile_counts.items() if v not in base}
+    assert grown, "overflow must recompile"
+
+
+def test_arg_carried_mode_resolution(tail_graph):
+    g = tail_graph
+    # auto: resolved by the edge-count threshold
+    assert make_bfs_engine(g, capacity=2,
+                           arg_carried_threshold=1)._arg_carried
+    assert not make_bfs_engine(g, capacity=2,
+                               arg_carried_threshold=10**9)._arg_carried
+    # explicit True forces it regardless of size; legacy cannot carry
+    assert make_bfs_engine(g, capacity=2, arg_carried=True)._arg_carried
+    with pytest.raises(ValueError, match="carriable"):
+        make_bfs_engine(g, capacity=2, arg_carried=True, legacy=True)
+    with pytest.raises(ValueError, match="fused round"):
+        make_bfs_engine(g, capacity=2, warmup=True, legacy=True)
+
+
+def test_background_warmup_compiles_off_hot_path(tail_graph):
+    """warmup=True: apply_delta returns without compiling; the old edition
+    keeps serving its in-flight query; once the warm thread finishes, the
+    new version's first dispatch adds ZERO compiles."""
+    g = tail_graph
+    eng = make_bfs_engine(g, capacity=3, warmup=True)
+    qin = eng.submit(jnp.asarray([48, 59], jnp.int32))
+    eng.run_round()
+    compiles_before = eng.stats.jit_compiles
+    eng.apply_delta(adds=[(48, 58)])
+    assert eng.stats.warmups == 1
+    # apply_delta itself never compiles — the warm thread does
+    assert eng.run_until_drained()[qin]["dist"] == 11  # pinned v0, old path
+    assert eng.wait_warmup(timeout=300), "warm thread did not finish"
+    warmed = eng.stats.jit_compiles
+    assert warmed > compiles_before  # the thread really compiled v1
+    qid = eng.submit(jnp.asarray([48, 59], jnp.int32))
+    res = eng.run_until_drained()
+    assert eng.stats.jit_compiles == warmed, "post-warm dispatch recompiled"
+    assert int(np.asarray(res[qid]["dist"])) == 2  # v1 shortcut
+    _assert_res_equal(res[qid], _fresh_answer(eng.graph, [48, 59]))
+
+
+def test_suspend_across_two_mutations_refcount(tail_graph):
+    """Satellite pin: payloads suspended across >= 2 consecutive mutations
+    keep their admission edition installed (refcounted), resume on it, and
+    the edition is pruned only after the last reference drops."""
+    g = tail_graph
+    eng = make_bfs_engine(g, capacity=2)
+    qid0 = eng.submit(jnp.asarray([48, 59], jnp.int32))
+    qid1 = eng.submit(jnp.asarray([48, 57], jnp.int32))
+    eng.run_round()
+    victims = np.flatnonzero(np.asarray(eng.runtime.live)).tolist()
+    assert len(victims) == 2
+    eng.runtime.suspend(victims)
+    assert eng._resume_refs == {0: 2}  # two payloads pin v0
+
+    info1 = eng.apply_delta(adds=[(48, 59)])        # v1
+    info2 = eng.apply_delta(adds=[(48, 58)])        # v2
+    # v0 survives both prunes on refcount alone; v1 had no readers
+    assert info1["editions"] == [0, 1]
+    assert info2["editions"] == [0, 2]
+
+    qid2 = eng.submit(jnp.asarray([48, 59], jnp.int32))  # admits on v2
+    res = eng.run_until_drained()
+    assert eng._resume_refs == {}  # both resumes released their pin
+    assert int(np.asarray(res[qid0]["dist"])) == 11  # v0: the long path
+    assert int(np.asarray(res[qid1]["dist"])) == 9
+    assert int(np.asarray(res[qid2]["dist"])) == 1   # v2: direct edge
+    _assert_res_equal(res[qid0], _fresh_answer(g, [48, 59]))
+    _assert_res_equal(res[qid2], _fresh_answer(eng.graph, [48, 59]))
+    # last reference gone: the next mutation finally prunes v0
+    info3 = eng.apply_delta()
+    assert info3["editions"] == [3]
+
+
+def test_result_cache_bucketed_invalidation(tail_graph):
+    from repro.core.runtime import ResultCache, _MISS
+
+    c = ResultCache(8)
+    c.put("aa:1", 1)
+    c.put("aa:2", 2)
+    c.put("bb:3", 3)
+    assert c.invalidate_except("bb") == 2
+    assert len(c) == 1 and c.get("bb:3") == 3 and c.get("aa:1") is _MISS
+    # LRU eviction keeps the buckets consistent
+    c2 = ResultCache(2)
+    c2.put("v1:a", 1)
+    c2.put("v1:b", 2)
+    c2.put("v2:c", 3)  # evicts v1:a
+    assert len(c2) == 2
+    assert c2.invalidate_except("v2") == 1  # only v1:b left to drop
+    assert c2.get("v2:c") == 3
+    # the predicate sweep still works and maintains buckets
+    c2.put("v2:d", 4)
+    assert c2.invalidate(lambda k: k.endswith("d")) == 1
+    assert c2.invalidate_except("zz") == 1
+    assert len(c2) == 0
+
+    # engine path: the mutation invalidation is timed into the new counter
+    eng = make_bfs_engine(tail_graph, capacity=2, result_cache=8)
+    qid = eng.submit(jnp.asarray([48, 59], jnp.int32))
+    eng.run_until_drained()
+    assert eng.stats.cache_invalidation_ms == 0.0
+    info = eng.apply_delta(adds=[(48, 59)])
+    assert info["cache_invalidated"] == 1
+    assert eng.stats.cache_invalidation_ms > 0.0
+
+
+def test_sharded_splice_matches_full_repartition(tail_graph):
+    """Host-level satellite pin (no mesh needed): for both partitions, the
+    shard-local splice holds exactly the edges a full re-partition would
+    put in each row, and a row outgrowing Emax falls back to the full
+    path."""
+    from repro.core.distributed import ShardedGraph
+
+    g = tail_graph.padded(64)
+    es, ed_ = np.asarray(g.src), np.asarray(g.dst)
+    dels = [(int(es[4]), int(ed_[4]))]
+    adds = [(3, 17), (40, 2), (59, 1)]
+
+    def rows(sg, r):
+        v = np.asarray(sg.valid[r])
+        return (np.asarray(sg.srcp[r])[v], np.asarray(sg.dstp[r])[v],
+                np.asarray(sg.wp[r])[v])
+
+    for part in ("dst", "src"):
+        sg = ShardedGraph(g, 8, partition=part)
+        emax0 = int(sg.srcp.shape[1])
+        delta = g.make_delta(adds=adds, dels=dels)
+        g1 = g.apply_delta(delta)
+        spliced = sg.apply_delta(g1, delta)
+        assert int(spliced.srcp.shape[1]) == emax0  # shapes held
+        full = ShardedGraph(g1, 8, partition=part)
+        for r in range(8):
+            for a, b in zip(rows(spliced, r), rows(full, r)):
+                np.testing.assert_array_equal(a, b, err_msg=f"{part} row {r}")
+        # untouched rows must be the SAME buffers, not recomputed copies
+        d = delta if part == "dst" else delta.reversed()
+        touched = set(int(t) for t in d.touched_dst_blocks(sg.block))
+        untouched = [r for r in range(8) if r not in touched]
+        assert untouched, "delta unexpectedly touched every row"
+        for r in untouched:
+            np.testing.assert_array_equal(np.asarray(spliced.srcp[r]),
+                                          np.asarray(sg.srcp[r]))
+        # overflow: enough edges into one block to outgrow Emax + headroom
+        blk0 = [(s, 0) if part == "dst" else (0, s)
+                for s in range(1, emax0 + 6)]
+        dd = g.make_delta(adds=blk0)
+        gBig = g.apply_delta(dd)
+        fb = sg.apply_delta(gBig, dd)
+        fullBig = ShardedGraph(gBig, 8, partition=part)
+        assert int(fb.srcp.shape[1]) == int(fullBig.srcp.shape[1])
+        for r in range(8):
+            for a, b in zip(rows(fb, r), rows(fullBig, r)):
+                np.testing.assert_array_equal(a, b)
+
+
+SPMD_AC_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.apps.ppsp import make_bfs_engine
+    from repro.core.distributed import ShardedGraph
+    from repro.core.graph import Graph, random_graph
+    from repro.launch.mesh import make_mesh
+
+    assert len(jax.devices()) == 8
+    core = random_graph(48, 3.0, seed=1, directed=True)
+    src = np.concatenate([np.asarray(core.src), np.arange(48, 59)])
+    dst = np.concatenate([np.asarray(core.dst), np.arange(49, 60)])
+    g0 = Graph.from_edges(src.astype(np.int32), dst.astype(np.int32),
+                          60).padded(8)
+    mesh8 = make_mesh((8,), ("w",))
+
+    def fresh(g, q):
+        e = make_bfs_engine(g, capacity=2)
+        qid = e.submit(jnp.asarray(q, jnp.int32))
+        return e.run_until_drained()[qid]
+
+    eng = make_bfs_engine(g0, capacity=3, mesh=mesh8, arg_carried=True)
+    id0 = eng.submit(jnp.asarray([48, 59], jnp.int32))
+    eng.run_round()
+    assert int(np.asarray(eng.runtime.live).sum()) == 1
+    base = dict(eng.compile_counts)
+
+    # two in-capacity mutations with the query in flight; the backend's
+    # partitions are spliced shard-locally (refresh receives the delta)
+    eng.apply_delta(adds=[(48, 58)])
+    g1 = eng.graph
+    id1 = eng.submit(jnp.asarray([48, 59], jnp.int32))
+    eng.run_round()
+    eng.apply_delta(adds=[(0, 59)], dels=[(48, 58)])
+    g2 = eng.graph
+    id2 = eng.submit(jnp.asarray([48, 59], jnp.int32))
+    res = eng.run_until_drained()
+
+    # sharded splice == full re-partition, row for row, on the final graph
+    be = eng._editions[eng._current_version].backends["default"]
+    full = ShardedGraph(g2, 8, partition=be.sg.partition)
+    for r in range(8):
+        for a, b in [(be.sg.srcp, full.srcp), (be.sg.dstp, full.dstp),
+                     (be.sg.wp, full.wp)]:
+            va = np.asarray(be.sg.valid[r]); vb = np.asarray(full.valid[r])
+            np.testing.assert_array_equal(np.asarray(a[r])[va],
+                                          np.asarray(b[r])[vb])
+
+    # zero recompiles across both mutations (shared arg-carried entries)
+    newv = {v: c for v, c in eng.compile_counts.items() if v not in base}
+    assert not newv, f"SPMD arg-carried recompiled: {newv}"
+
+    # version-pinning parity vs fresh single-device engines
+    for qid, gg in [(id0, g0), (id1, g1), (id2, g2)]:
+        want = fresh(gg, [48, 59])
+        assert set(res[qid]) == set(want)
+        for k in want:
+            np.testing.assert_array_equal(np.asarray(res[qid][k]),
+                                          np.asarray(want[k]))
+    assert int(np.asarray(res[id0]["dist"])) == 11
+    assert int(np.asarray(res[id1]["dist"])) == 2
+    print("MUTATION_SPMD_AC_OK")
+    """
+)
+
+
+def test_spmd_arg_carried_shard_local_delta():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep)
+    )
+    env["JAX_PLATFORMS"] = "cpu"  # see test_sharded_engine.py
+    r = subprocess.run([sys.executable, "-c", SPMD_AC_SCRIPT],
+                       capture_output=True, text=True, env=env, timeout=560)
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "MUTATION_SPMD_AC_OK" in r.stdout
